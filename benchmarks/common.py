@@ -1,0 +1,42 @@
+"""Shared helpers for the per-table benchmark modules."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def fmt_ms(mean: float, std: float = None) -> str:
+    if std is None:
+        return f"{mean:.2f}"
+    return f"({mean:.2f}, {std:.2f})"
+
+
+def emit(name: str, rows: List[Dict], notes: str = "") -> Dict:
+    """Print a benchmark's table and persist its JSON artifact."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print(f"\n=== {name} ===")
+    if notes:
+        print(notes)
+    if rows:
+        keys = list(rows[0].keys())
+        widths = {k: max(len(k), *(len(str(r.get(k, ''))) for r in rows))
+                  for k in keys}
+        print("  ".join(k.ljust(widths[k]) for k in keys))
+        for r in rows:
+            print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
+    payload = {"name": name, "rows": rows, "notes": notes,
+               "time": time.time()}
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
+def tup(mean: float, std: float, nd: int = 2) -> str:
+    return f"({mean:.{nd}f}, {std:.{nd}f})"

@@ -1,0 +1,57 @@
+"""Paper Fig 6: PS capacity bottleneck — K80 vs V100 scaling, 1 vs 2 PS,
+plus the TPU mapping (all-reduce vs reduce-scatter schedule)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import pricing
+from repro.core.scheduler import collective_schedule, plan_ps
+from repro.core.simulator import ClusterSpec, simulate_many
+
+
+def run() -> dict:
+    rows = []
+    base = simulate_many(ClusterSpec.homogeneous("K80", 1, transient=True),
+                         n_runs=16, seed=80)
+    for kind in ("K80", "V100"):
+        for n in (1, 2, 4, 8):
+            for n_ps in (1, 2):
+                if n == 1 and n_ps == 2:
+                    continue
+                spec = ClusterSpec.homogeneous(kind, n, transient=True,
+                                               master_failover=True)
+                spec = ClusterSpec(workers=spec.workers, n_ps=n_ps,
+                                   master_failover=True)
+                s = simulate_many(spec, n_runs=32, seed=81)
+                if s.n_completed == 0:
+                    continue
+                r0 = s.by_r.get(0, {"time_h": s.time_h, "cost": s.cost})
+                rows.append({
+                    "cluster": f"{n}x{kind}", "n_ps": n_ps,
+                    "time_h": f"{r0['time_h'][0]:.2f}",
+                    "speedup_vs_1K80": f"{base.time_h[0]/r0['time_h'][0]:.2f}x",
+                    "cost_$": f"{r0['cost'][0]:.2f}",
+                })
+
+    # headline paper numbers to compare: V100 plateaus at ~4 workers on
+    # 1 PS; 2 PS buys up to 1.75x
+    v4_1 = next(r for r in rows if r["cluster"] == "4xV100" and r["n_ps"] == 1)
+    v8_1 = next(r for r in rows if r["cluster"] == "8xV100" and r["n_ps"] == 1)
+    v8_2 = next(r for r in rows if r["cluster"] == "8xV100" and r["n_ps"] == 2)
+    ratio = float(v8_1["time_h"]) / float(v8_2["time_h"])
+
+    # TPU-native mapping: "adding a PS" == switching the grad collective
+    pb = int(3.2e9 * 4)                      # starcoder-class fp32 grads
+    ar = collective_schedule(pb, 16, zero1=False)
+    rs = collective_schedule(pb, 16, zero1=True)
+    notes = (f"V100 8-worker: 2 PS is {ratio:.2f}x faster than 1 PS "
+             f"(paper: up to 1.75x). plan_ps: K80x4 -> "
+             f"{plan_ps(['K80']*4)} PS, V100x8 -> {plan_ps(['V100']*8)} PS. "
+             f"TPU mapping: all-reduce {ar.grad_bytes_on_wire/1e9:.1f} GB "
+             f"exposed vs rs+ag {rs.grad_bytes_on_wire/1e9:.1f} GB "
+             f"overlappable (ZeRO-1) — the 'second PS' is the sharded "
+             f"schedule (DESIGN.md §2)")
+    return emit("fig6_ps_bottleneck", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

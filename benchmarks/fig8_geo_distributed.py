@@ -1,0 +1,46 @@
+"""Paper Fig 8: cross-region clusters — WAN penalty on async training."""
+from __future__ import annotations
+
+from benchmarks.common import emit, tup
+from repro.core.simulator import ClusterSpec, WorkerSpec, simulate_many
+from repro.optim.compression import compression_bytes_ratio
+
+
+def _spec(regions):
+    return ClusterSpec(tuple(WorkerSpec("K80", True, r) for r in regions),
+                       n_ps=1, ps_region="us-east1", master_failover=True)
+
+
+def run() -> dict:
+    cases = {
+        "(4,0,0) single region": ["us-east1"] * 4,
+        "(2,0,2) two regions": ["us-east1", "us-east1",
+                                "us-west1", "us-west1"],
+        "(2,1,1) three regions": ["us-east1", "us-east1",
+                                  "us-central1", "us-west1"],
+    }
+    rows = []
+    t_local = None
+    for label, regions in cases.items():
+        s = simulate_many(_spec(regions), n_runs=32, seed=90)
+        r0 = s.by_r.get(0, {"time_h": s.time_h, "cost": s.cost})
+        t = r0["time_h"][0]
+        if t_local is None:
+            t_local = t
+        rows.append({
+            "placement": label,
+            "time_h": tup(*r0["time_h"]),
+            "slowdown_%": f"{(t/t_local-1)*100:.1f}",
+            "paper": "0 / ~48 / ~48 %",
+        })
+    notes = ("3-region ~= 2-region (paper Fig 8). Mitigation shipped for "
+             "the TPU path: gradient compression on the slow axis — topk "
+             f"1% cuts cross-pod bytes to "
+             f"{compression_bytes_ratio('topk', 0.01)*100:.0f}% "
+             f"(ternary: {compression_bytes_ratio('ternary')*100:.1f}%), "
+             "see optim/compression.py")
+    return emit("fig8_geo_distributed", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

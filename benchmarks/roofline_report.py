@@ -1,0 +1,53 @@
+"""§Roofline: three-term report per (arch x shape) from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --mesh both``) and prints the single-pod roofline table + the
+per-cell bottleneck and useful-FLOPs ratio. Does NOT recompile anything.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run() -> dict:
+    rows = []
+    skips = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("skipped"):
+            skips.append(f"{d['arch']}/{d['shape']}: {d['reason']}")
+            continue
+        if "roofline" not in d or d.get("mesh") != "16x16":
+            continue                          # single-pod table per spec
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "config": ("optimized" if path.endswith("_opt.json")
+                       else "baseline"),
+            "t_comp_ms": f"{r['t_compute']*1e3:.2f}",
+            "t_mem_ms": f"{r['t_memory']*1e3:.2f}",
+            "t_coll_ms": f"{r['t_collective']*1e3:.2f}",
+            "bound": r["bottleneck"],
+            "useful": f"{r['useful_flops_ratio']:.2f}",
+            "roofline": f"{r['roofline_fraction']:.3f}",
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["config"]))
+    if not rows:
+        return emit("roofline_report", [],
+                    "no dry-run artifacts found — run "
+                    "`PYTHONPATH=src python -m repro.launch.dryrun --all`")
+    notes = (f"{len(rows)} single-pod cells; {len(skips)} spec-mandated "
+             f"skips (full-attention long_500k). Multi-pod (2x16x16) "
+             f"compile artifacts present alongside.")
+    return emit("roofline_report", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

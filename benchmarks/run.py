@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig5
+
+Each module prints its table (ours vs the paper's numbers) and writes a
+JSON artifact under artifacts/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
+                        fig8_geo_distributed, roofline_report,
+                        selective_revocation, staleness_accuracy,
+                        table1_transient_vs_ondemand,
+                        table3_scale_up_vs_out, table4_revocation_overhead,
+                        table5_ondemand_comparison)
+
+MODULES = {
+    "table1": table1_transient_vs_ondemand,
+    "table3": table3_scale_up_vs_out,
+    "table4": table4_revocation_overhead,
+    "table5": table5_ondemand_comparison,
+    "fig5": fig5_dynamic_cluster,
+    "fig6": fig6_ps_bottleneck,
+    "fig8": fig8_geo_distributed,
+    "staleness": staleness_accuracy,
+    "selective": selective_revocation,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    t0 = time.monotonic()
+    for name in names:
+        if name not in MODULES:
+            raise SystemExit(f"unknown benchmark {name!r}; "
+                             f"known: {sorted(MODULES)}")
+        t1 = time.monotonic()
+        MODULES[name].run()
+        print(f"[{name} done in {time.monotonic()-t1:.1f}s]")
+    print(f"\nall benchmarks done in {time.monotonic()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

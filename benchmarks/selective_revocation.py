@@ -1,0 +1,115 @@
+"""Paper §III-D PROPOSAL, implemented + measured: selective revocation.
+
+The paper observes (Table IV, shaded cells) that clusters which lost a
+worker sometimes ended with HIGHER accuracy — the revoked server was an
+under-performer feeding extra-stale gradients — and proposes that
+providers let customers choose WHICH servers to return. We implement the
+customer-side policy (core/scheduler.choose_victims: rank by contributed
+staleness, tie-break by rate) and measure it with real async-PS training:
+
+  cluster: 3 x K80 + 1 straggler at 0.25 x K80 rate (its pushes are
+  maximally stale). Mid-run the provider demands one server back.
+    arm A  provider-chosen (the paper's world): a RANDOM worker
+    arm B  customer-chosen (the proposal): choose_victims -> straggler
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, tup
+from repro.config import OptimizerConfig, ScheduleConfig
+from repro.core.scheduler import choose_victims
+from repro.core.staleness import AsyncPSSimulator, AsyncWorker
+from repro.data.pipeline import Cifar10Like
+from repro.train.step import cross_entropy
+
+TASK = Cifar10Like()
+DIM, HID, NCLS = 32 * 32 * 3, 64, 10
+UPDATES = 700
+REVOKE_T = 40.0           # provider's demand arrives at t=40s
+
+
+def _init(seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"w1": jax.random.normal(k1, (DIM, HID)) * (1 / DIM ** 0.5),
+            "b1": jnp.zeros((HID,)),
+            "w2": jax.random.normal(k2, (HID, NCLS)) * (1 / HID ** 0.5),
+            "b2": jnp.zeros((NCLS,))}
+
+
+def _fwd(p, x):
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    return cross_entropy(_fwd(p, x), batch["labels"])
+
+
+def _acc(p):
+    eb = TASK.eval_batch(2048)
+    x = eb["images"].reshape(2048, -1)
+    return float((jnp.argmax(_fwd(p, x), -1) == eb["labels"]).mean())
+
+
+def _workers(victim: int):
+    rates = {0: 4.55, 1: 4.55, 2: 4.55, 3: 4.55 * 0.25}   # 3 is the straggler
+    ws = []
+    for wid, r in rates.items():
+        w = AsyncWorker(wid, rate=r)
+        if wid == victim:
+            w.revoke_t = REVOKE_T
+        ws.append(w)
+    return ws, rates
+
+
+def _run(victim: int, seed: int):
+    sim = AsyncPSSimulator(
+        _loss, _init(seed),
+        OptimizerConfig(name="momentum", lr=0.02, base_workers=1,
+                        grad_clip=1.0),
+        ScheduleConfig(kind="step", warmup_steps=1, total_steps=UPDATES,
+                       step_boundaries=(UPDATES // 2,), step_factors=(0.1,)))
+    ws, _ = _workers(victim)
+    res = sim.run(ws, lambda u, w: TASK.batch(u * 64 + w, 32), UPDATES,
+                  seed=seed)
+    return _acc(res.params), res
+
+
+def run() -> dict:
+    # calibration pass: learn which worker the SELECTIVE policy would pick
+    cal_acc, cal = _run(victim=-1, seed=0)          # nobody revoked
+    rates = {0: 4.55, 1: 4.55, 2: 4.55, 3: 4.55 * 0.25}
+    pick = choose_victims(cal.staleness_by_worker, 1, rates)[0]
+    mean_st = {w: float(np.mean(s)) for w, s in
+               sorted(cal.staleness_by_worker.items())}
+
+    rng = np.random.default_rng(7)
+    rows = []
+    accs = {"none": [], "random": [], "selective": []}
+    for seed in range(4):
+        accs["none"].append(_run(-1, seed)[0])
+        accs["random"].append(_run(int(rng.integers(0, 4)), seed)[0])
+        accs["selective"].append(_run(pick, seed)[0])
+
+    for arm, label in (("none", "no revocation (control)"),
+                       ("random", "provider-chosen victim (status quo)"),
+                       ("selective", "customer-chosen victim (§III-D)")):
+        a = accs[arm]
+        rows.append({"arm": label,
+                     "acc_%": tup(100 * float(np.mean(a)),
+                                  100 * float(np.std(a)))})
+    delta = float(np.mean(accs["selective"]) - np.mean(accs["random"]))
+    notes = (f"selective policy picked worker {pick} "
+             f"(per-worker mean staleness: {mean_st}; worker 3 is the "
+             f"0.25x straggler). selective - random accuracy: "
+             f"{delta*100:+.2f} pts — the paper's proposed provider-API "
+             f"change, implemented customer-side and validated with real "
+             f"async-PS training.")
+    return emit("selective_revocation", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Table IV: revocation overhead vs cluster size (r = 0/1/2)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, tup
+from repro.core.simulator import ClusterSpec, simulate_many
+
+PAPER_OVERHEAD = {            # (size, r) -> paper time-overhead %
+    (2, 1): 61.7, (4, 1): 15.3, (8, 1): 3.9,
+    (4, 2): 48.0, (8, 2): 5.9,
+}
+
+
+def run() -> dict:
+    rows = []
+    for n in (2, 4, 8):
+        spec = ClusterSpec.homogeneous("K80", n, transient=True,
+                                       master_failover=True)
+        s = simulate_many(spec, n_runs=400, seed=40 + n)
+        base = s.by_r.get(0)
+        if base is None:
+            continue
+        for r in (0, 1, 2):
+            if r not in s.by_r:
+                continue
+            st = s.by_r[r]
+            t_ovh = (st["time_h"][0] / base["time_h"][0] - 1) * 100
+            c_ovh = (st["cost"][0] / base["cost"][0] - 1) * 100
+            rows.append({
+                "cluster": n, "r": r,
+                "time_h": tup(*st["time_h"]),
+                "cost_$": tup(*st["cost"]),
+                "time_ovh_%": f"{t_ovh:.1f}" if r else "-",
+                "cost_ovh_%": f"{c_ovh:.1f}" if r else "-",
+                "paper_ovh_%": PAPER_OVERHEAD.get((n, r), "-"),
+            })
+    notes = ("overhead decreases with cluster size at fixed r (paper's C3); "
+             "master_failover=True isolates revocation cost from job death")
+    return emit("table4_revocation_overhead", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

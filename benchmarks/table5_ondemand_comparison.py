@@ -1,0 +1,43 @@
+"""Paper Table V: r=0 transient vs on-demand — time parity, ~2.6x cost."""
+from __future__ import annotations
+
+from benchmarks.common import emit, tup
+from repro.core.simulator import ClusterSpec, simulate_many
+
+PAPER = {
+    2: ((1.96, 1.28), (1.99, 3.16)),
+    4: ((0.98, 1.14), (0.99, 3.02)),
+    8: ((0.51, 1.11), (0.51, 3.01)),
+}
+BUDGET = 2.83
+
+
+def run() -> dict:
+    rows = []
+    for n in (2, 4, 8):
+        tr = simulate_many(ClusterSpec.homogeneous("K80", n, transient=True),
+                           n_runs=64, seed=50 + n)
+        od = simulate_many(ClusterSpec.homogeneous("K80", n, transient=False),
+                           n_runs=10, seed=60 + n)
+        r0 = tr.by_r[0]
+        (pt_t, pt_c), (po_t, po_c) = PAPER[n]
+        rows.append({
+            "cluster": n, "status": "r = 0",
+            "time_h": tup(*r0["time_h"]), "cost_$": tup(*r0["cost"]),
+            "paper": f"({pt_t}h, ${pt_c})",
+            "over_budget": "no" if r0["cost"][0] <= BUDGET else "YES",
+        })
+        rows.append({
+            "cluster": n, "status": "on-demand",
+            "time_h": tup(*od.time_h), "cost_$": tup(*od.cost),
+            "paper": f"({po_t}h, ${po_c})",
+            "over_budget": "no" if od.cost[0] <= BUDGET else "YES",
+        })
+    notes = ("on-demand matches transient r=0 on time but exceeds the "
+             "single-K80 budget (paper: by up to 11.7%) — the transient "
+             "economics claim")
+    return emit("table5_ondemand_comparison", rows, notes)
+
+
+if __name__ == "__main__":
+    run()

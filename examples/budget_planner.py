@@ -1,0 +1,50 @@
+"""Budget-constrained cluster planning — the paper's §III-C question as a
+library call: "I have $X, what cluster do I launch?"
+
+    PYTHONPATH=src python examples/budget_planner.py --budget 2.83
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cost import pareto_front, plan_within_budget
+from repro.core.scheduler import pick_offers, plan_ps, proportional_shards
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=2.83,
+                    help="USD (paper: one on-demand K80 run)")
+    ap.add_argument("--max-failure-p", type=float, default=0.10)
+    ap.add_argument("--min-accuracy", type=float, default=90.0)
+    args = ap.parse_args()
+
+    plans = plan_within_budget(args.budget, max_workers=12,
+                               max_failure_p=args.max_failure_p,
+                               min_accuracy=args.min_accuracy)
+    print(f"feasible plans under ${args.budget} "
+          f"(fail_p<={args.max_failure_p}, acc>={args.min_accuracy}%): "
+          f"{len(plans)}")
+    print(f"{'config':<30}{'time_h':>8}{'cost_$':>8}{'fail_p':>8}"
+          f"{'acc_%':>8}{'speedup':>9}")
+    for p in pareto_front(plans)[:10]:
+        print(f"{p.config.describe():<30}{p.time_h:>8.2f}{p.cost_usd:>8.2f}"
+              f"{p.failure_p:>8.2f}{p.accuracy:>8.2f}"
+              f"{p.speedup_vs_1k80:>8.2f}x")
+
+    best = plans[0]
+    kinds = [k for k, c in best.config.workers for _ in range(c)]
+    print(f"\nlaunch plan for {best.config.describe()}:")
+    print(f"  parameter servers: {plan_ps(kinds)}")
+    offers = pick_offers(len(kinds))
+    print(f"  offers: {[f'{o.kind}@{o.region}' for o in offers]}")
+    from repro.core import pricing
+    rates = [pricing.SERVER_TYPES[k].steps_per_sec for k in kinds]
+    print(f"  proportional shards of a 256-row global batch: "
+          f"{proportional_shards(256, rates)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving with continuous batching over request waves.
+
+    PYTHONPATH=src python examples/serving_batched.py [--arch rwkv6-7b]
+
+Submits 3x more requests than slots; the engine admits/retires requests
+continuously and reports throughput. Works for every decoder-only family
+(dense / MoE / hybrid / SSM / VLM backbones).
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.config import get_config
+from repro.models import layers as L
+from repro.models.builder import build_model
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = L.unbox(model.init(jax.random.key(0)))
+    engine = ServeEngine(model, params, max_batch=args.max_batch, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, size=(6,)).tolist(),
+                    max_new_tokens=12)
+            for i in range(args.requests)]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.monotonic()
+    steps = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    print(f"{args.arch}: {args.requests} requests through "
+          f"{args.max_batch} slots in {steps} engine steps, "
+          f"{engine.tokens_decoded} tokens, "
+          f"{engine.tokens_decoded/wall:.1f} tok/s (CPU, reduced model)")
+    for r in reqs[:3]:
+        print(f"  request {r.rid}: {r.prompt} -> {r.generated}")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

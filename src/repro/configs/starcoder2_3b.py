@@ -1,0 +1,33 @@
+"""starcoder2-3b — dense GQA code model with RoPE.
+
+[arXiv:2402.19173; hf]  30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152. d_ff = 4*d_model non-gated GeLU MLP (StarCoder2 uses a
+standard 4x MLP).
+"""
+from repro.config import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-3b",
+        family="dense",
+        num_layers=30,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=12288,
+        vocab_size=49152,
+        gated_mlp=False,
+        qkv_bias=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=256, vocab_size=512,
+    )
+
+
+register("starcoder2-3b", full, reduced)

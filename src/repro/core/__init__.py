@@ -1,0 +1,21 @@
+"""The paper's contribution: the transient-aware distributed-training runtime.
+
+Modules
+-------
+transient   lifetime distributions + server state (Fig 3, §II-B)
+pricing     Table II price book, per-second billing
+cluster     sparse mapping: slots / active set / shard ownership (§III-F)
+elastic     masked + remesh elastic execution, adaptive LR (C5/C6)
+staleness   AsyncPSSimulator: exact async-PS semantics in JAX (C4)
+checkpoint  master-less replicated checkpointing + fast-save (C2)
+cost        analytic cost model + budget planner (C1, §III-C)
+scheduler   heterogeneous shards, PS-capacity/collective map, offers (C7/C8)
+simulator   event-driven Monte-Carlo of full training runs (Tables I-V)
+"""
+from repro.core.cluster import SparseCluster, SlotState  # noqa: F401
+from repro.core.checkpoint import CheckpointManager  # noqa: F401
+from repro.core.elastic import (ElasticRuntime, RevocationEvent,  # noqa: F401
+                                make_masked_train_step, slot_batch)
+from repro.core.staleness import AsyncPSSimulator, AsyncWorker  # noqa: F401
+from repro.core.simulator import (ClusterSpec, WorkerSpec,  # noqa: F401
+                                  simulate_many, simulate_run)

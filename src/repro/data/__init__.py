@@ -1,0 +1,2 @@
+from repro.data.pipeline import (ShardedDataset, make_batch, batch_spec,
+                                 Cifar10Like)  # noqa: F401

@@ -1,0 +1,166 @@
+"""Deterministic sharded data pipeline with elastic resharding.
+
+The paper's key fault-tolerance bound (C3): when a worker is revoked, the
+lost work is at most one batch. We make that bound *constructive*: batches
+are a pure function of ``(step, shard_id, num_shards, seed)``, so
+
+- restart from a checkpointed ``step`` replays the exact same stream,
+- membership changes just change ``num_shards`` — the surviving workers
+  deterministically re-partition the remaining stream with no coordination,
+- no batch is ever double-applied or skipped beyond the documented bound.
+
+Synthetic data keeps the container hermetic: token streams come from a
+counter-based hash (stateless, no RNG carried between steps); a learnable
+Cifar10-like task provides real signal for the staleness/accuracy
+reproduction (the class decides a planted linear pattern so small models
+can actually learn it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import modality
+
+PyTree = Any
+
+
+def _fold(seed: int, *vals: int) -> np.random.Generator:
+    # counter-based: a fresh generator per (seed, step, shard); cheap & pure
+    ss = np.random.SeedSequence([seed, *[int(v) & 0x7FFFFFFF for v in vals]])
+    return np.random.default_rng(ss)
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (also used by smoke tests; mirrors launch/specs.py)
+# ---------------------------------------------------------------------------
+
+def lm_batch_keys(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "vlm":
+        return ("tokens", "patch_embeds", "mrope_positions", "labels")
+    if cfg.family == "encdec":
+        return ("frame_embeds", "tokens", "labels")
+    if cfg.family == "resnet":
+        return ("images", "labels")
+    return ("tokens", "labels")
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, *, seed: int = 0,
+               step: int = 0, np_rng: Optional[np.random.Generator] = None
+               ) -> Dict[str, jnp.ndarray]:
+    """One synthetic batch with the exact input layout of ``cfg``."""
+    rng = np_rng or _fold(seed, step)
+    V = max(2, cfg.vocab_size)
+
+    if cfg.family == "resnet":
+        return {
+            "images": jnp.asarray(rng.normal(size=(batch, cfg.image_size,
+                                                   cfg.image_size, 3)),
+                                  jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.num_classes,
+                                               size=(batch,)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_img, n_txt = modality.vlm_split(cfg, seq_len)
+        return {
+            "tokens": jnp.asarray(rng.integers(0, V, size=(batch, n_txt)),
+                                  jnp.int32),
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(batch, n_img, cfg.d_model), ).astype(np.float32)
+                * 0.02, jnp.dtype(cfg.dtype)),
+            "mrope_positions": modality.mrope_positions(cfg, batch, seq_len),
+            "labels": jnp.asarray(rng.integers(0, V, size=(batch, seq_len)),
+                                  jnp.int32),
+        }
+    if cfg.family == "encdec":
+        ne, nd = modality.encdec_split(cfg, seq_len)
+        return {
+            "frame_embeds": jnp.asarray(
+                rng.normal(size=(batch, ne, cfg.d_model)).astype(np.float32)
+                * 0.02, jnp.dtype(cfg.dtype)),
+            "tokens": jnp.asarray(rng.integers(0, V, size=(batch, nd)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, V, size=(batch, nd)),
+                                  jnp.int32),
+        }
+    tokens = rng.integers(0, V, size=(batch, seq_len + 1))
+    return {
+        "tokens": jnp.asarray(tokens[:, :-1], jnp.int32),
+        "labels": jnp.asarray(tokens[:, 1:], jnp.int32),
+    }
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq_len: int
+               ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins matching ``make_batch`` (for the dry-run)."""
+    sample = jax.eval_shape(
+        lambda: make_batch(cfg, batch, seq_len))  # no allocation under eval_shape
+    return dict(sample)
+
+
+# ---------------------------------------------------------------------------
+# Sharded dataset
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDataset:
+    """Pure-function dataset: batch = f(step, shard, num_shards, seed)."""
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def shard_batch(self, step: int, shard: int, num_shards: int
+                    ) -> Dict[str, jnp.ndarray]:
+        if self.global_batch % num_shards:
+            raise ValueError(f"global batch {self.global_batch} not divisible "
+                             f"by {num_shards} shards")
+        per = self.global_batch // num_shards
+        rng = _fold(self.seed, step, shard, num_shards)
+        return make_batch(self.cfg, per, self.seq_len, np_rng=rng)
+
+    def global_batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        rng = _fold(self.seed, step, 0, 1)
+        return make_batch(self.cfg, self.global_batch, self.seq_len, np_rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# A learnable CIFAR-10-like task (planted signal) for accuracy experiments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Cifar10Like:
+    """32x32x3 images whose class plants a low-rank directional signal.
+
+    Small models reach high accuracy quickly, and *ordering/staleness of
+    updates changes the outcome* — which is exactly the property the
+    async-PS accuracy reproduction needs. Deterministic in (seed, step).
+    """
+    num_classes: int = 10
+    image_size: int = 32
+    signal: float = 3.0          # strong planted margin: linear models reach
+    seed: int = 0                # ~90%+, leaving headroom to SEE staleness
+
+    def _dirs(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 1234)
+        d = rng.normal(size=(self.num_classes,
+                             self.image_size * self.image_size * 3))
+        return (d / np.linalg.norm(d, axis=1, keepdims=True)).astype(np.float32)
+
+    def batch(self, step: int, batch: int, *, shard: int = 0,
+              num_shards: int = 1) -> Dict[str, jnp.ndarray]:
+        rng = _fold(self.seed, step, shard, num_shards)
+        y = rng.integers(0, self.num_classes, size=(batch,))
+        x = rng.normal(size=(batch, self.image_size * self.image_size * 3)
+                       ).astype(np.float32)
+        x = x + self.signal * self._dirs()[y]
+        x = x.reshape(batch, self.image_size, self.image_size, 3)
+        return {"images": jnp.asarray(x), "labels": jnp.asarray(y, jnp.int32)}
+
+    def eval_batch(self, batch: int = 512) -> Dict[str, jnp.ndarray]:
+        return self.batch(10_000_019, batch)   # held-out step namespace

@@ -1,0 +1,33 @@
+"""jit'd wrapper for decode attention with impl selection.
+
+Model layout: q (B, 1, H, D) one new token; cache (B, S, KV, D). The
+wrapper squeezes/transposes to the kernel's head-major layout.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  lengths: jax.Array, *, window=0, impl: str = "pallas",
+                  blk_k: int = 512) -> jax.Array:
+    """q: (B, 1, H, D); k/v cache: (B, S, KV, D); lengths (B,) ->
+    (B, 1, H, D)."""
+    qs = q[:, 0]                                   # (B, H, D)
+    kt = k_cache.transpose(0, 2, 1, 3)             # (B, KV, S, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    if impl == "xla":
+        out = decode_attention_ref(qs, kt, vt, lengths, window=window)
+    elif impl == "pallas":
+        out = decode_attention(qs, kt, vt, lengths, window=window,
+                               blk_k=blk_k, interpret=_on_cpu())
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out[:, None]

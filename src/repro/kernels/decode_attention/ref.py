@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for decode attention (full softmax, length-masked)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *, window=0,
+                         sm_scale: float | None = None) -> jax.Array:
+    """q: (B, H, D); k/v: (B, KV, S, D); lengths: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    _, KV, S, _ = k.shape
+    group = H // KV
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    win = jnp.asarray(window, jnp.int32)
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) * sm_scale
+    pos = jnp.arange(S)[None, None, :]
+    mask = pos < lengths[:, None, None]
+    mask &= jnp.where(win > 0, pos >= lengths[:, None, None] - win, True)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)

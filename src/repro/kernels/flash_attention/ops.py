@@ -1,0 +1,38 @@
+"""jit'd wrapper: impl selection + layout adaptation for model code.
+
+Model code holds activations as (B, S, H, D); the kernel wants head-major
+(B, H, S, D) so a q-block is one contiguous VMEM tile. The transpose pair
+is fused by XLA into the surrounding projections (verified in the dry-run
+HLO: no standalone transpose op survives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              sm_scale: float | None = None, impl: str = "pallas",
+              blk_q: int = 256, blk_k: int = 256) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "xla":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window,
+                            sm_scale=sm_scale)
+    elif impl == "pallas":
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              sm_scale=sm_scale, blk_q=blk_q, blk_k=blk_k,
+                              interpret=_on_cpu())
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.transpose(0, 2, 1, 3)

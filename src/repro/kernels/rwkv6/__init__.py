@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6.ops import wkv  # noqa: F401
+from repro.kernels.rwkv6.kernel import rwkv6_scan  # noqa: F401
+from repro.kernels.rwkv6.ref import rwkv6_ref  # noqa: F401

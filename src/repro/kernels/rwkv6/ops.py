@@ -1,0 +1,27 @@
+"""jit'd wrapper: model layout (B, S, H, D) <-> kernel head-major layout."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.kernel import rwkv6_scan
+from repro.kernels.rwkv6.ref import rwkv6_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: jax.Array, s0: jax.Array | None = None, *,
+        chunk: int = 64, impl: str = "pallas"):
+    """r/k/v/w: (B, S, H, D); u: (H, D); s0 (B, H, D, D) optional.
+    Returns (o (B, S, H, D) fp32, final state (B, H, D, D))."""
+    rt, kt, vt, wt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, w))
+    if impl == "xla":
+        out, state = rwkv6_ref(rt, kt, vt, wt, u, s0)
+    elif impl == "pallas":
+        out, state = rwkv6_scan(rt, kt, vt, wt, u, s0, chunk=chunk,
+                                interpret=_on_cpu())
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.transpose(0, 2, 1, 3), state

@@ -1,0 +1,27 @@
+"""Sequential oracle: the per-token WKV recurrence (rwkv.py's _wkv_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array | None = None):
+    """r/k/v/w: (B, H, S, D); u: (H, D); s0 optional (B, H, D, D).
+    Returns (o (B, H, S, D) fp32, final state (B, H, D, D))."""
+    B, H, S, D = r.shape
+    r32, k32, v32, w32 = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(S_state, t):
+        rt, kt, vt, wt = r32[:, :, t], k32[:, :, t], v32[:, :, t], w32[:, :, t]
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,Dk,Dv)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S_state + u32[None, :, :, None] * kv)
+        S_state = wt[..., :, None] * S_state + kv
+        return S_state, o
+
+    S0 = (jnp.zeros((B, H, D, D), jnp.float32) if s0 is None
+          else s0.astype(jnp.float32))
+    S_fin, os = jax.lax.scan(step, S0, jnp.arange(S))
+    return os.transpose(1, 2, 0, 3), S_fin                # (B,H,S,D)

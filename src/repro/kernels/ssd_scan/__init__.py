@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd  # noqa: F401
+from repro.kernels.ssd_scan.kernel import ssd_scan  # noqa: F401
+from repro.kernels.ssd_scan.ref import ssd_ref  # noqa: F401

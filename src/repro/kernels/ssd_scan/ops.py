@@ -1,0 +1,25 @@
+"""jit'd wrapper: model layout (B, S, H, P) <-> kernel head-major layout."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ssd(xdt: jax.Array, Bc: jax.Array, Cc: jax.Array, dA: jax.Array, *,
+        chunk: int = 128, impl: str = "pallas") -> jax.Array:
+    """xdt (B,S,H,P); Bc/Cc (B,S,N); dA (B,S,H) -> y (B,S,H,P)."""
+    xt = xdt.transpose(0, 2, 1, 3)
+    dt = dA.transpose(0, 2, 1)
+    if impl == "xla":
+        out = ssd_ref(xt, Bc, Cc, dt)
+    elif impl == "pallas":
+        out = ssd_scan(xt, Bc, Cc, dt, chunk=chunk, interpret=_on_cpu())
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out.transpose(0, 2, 1, 3)

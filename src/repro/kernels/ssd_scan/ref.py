@@ -1,0 +1,34 @@
+"""Sequential-recurrence oracle for the SSD kernel.
+
+Proves the chunked/dual form against the defining per-token recurrence:
+
+    S_t = exp(dA_t) S_{t-1} + B_t (x) xdt_t        (per head, (N, P) state)
+    y_t = C_t . S_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt: jax.Array, Bc: jax.Array, Cc: jax.Array, dA: jax.Array
+            ) -> jax.Array:
+    """xdt (B,H,S,P); Bc/Cc (B,S,N); dA (B,H,S) -> y (B,H,S,P)."""
+    B, H, S, P = xdt.shape
+    N = Bc.shape[-1]
+    xdt32 = xdt.astype(jnp.float32)
+    B32 = Bc.astype(jnp.float32)
+    C32 = Cc.astype(jnp.float32)
+    dA32 = dA.astype(jnp.float32)
+
+    def step(state, t):
+        # state: (B, H, N, P)
+        decay = jnp.exp(dA32[:, :, t])                       # (B, H)
+        outer = jnp.einsum("bn,bhp->bhnp", B32[:, t], xdt32[:, :, t])
+        state = state * decay[:, :, None, None] + outer
+        y = jnp.einsum("bn,bhnp->bhp", C32[:, t], state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 2, 0, 3).astype(xdt.dtype)        # (B,H,S,P)

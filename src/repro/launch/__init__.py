@@ -1,0 +1,4 @@
+# Launch layer: production mesh, dry-run, train/serve drivers.
+# NOTE: importing this package must never touch jax device state —
+# dryrun.py sets XLA_FLAGS before any jax import and must stay the
+# process entry point for the 512-device dry-run.

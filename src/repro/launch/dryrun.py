@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent at production
+scale without real hardware: 512 placeholder host devices stand in for
+2 pods x 256 chips, and ``jax.jit(...).lower().compile()`` must succeed
+for every assigned cell. Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the framework, not in the harness.
+
+Per cell the driver writes an artifact JSON (cost_analysis FLOPs/bytes,
+memory_analysis, parsed collective schedule, roofline terms) consumed by
+EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline_report.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    python -m repro.launch.dryrun --all                  # 40-cell baseline
+    python -m repro.launch.dryrun --all --mesh multi     # 2-pod pass
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (ASSIGNED_ARCHS, SHAPES, ModelConfig,
+                          OptimizerConfig, ShapeConfig, TrainConfig,
+                          get_config, shape_applicable)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as L
+from repro.models import modality
+from repro.models.builder import Model, build_model
+from repro.optim import make_optimizer
+from repro.roofline import RooflineReport, build_report, format_table, model_flops
+from repro.sharding import param_shardings, use_mesh
+from repro.train.step import TrainState, make_train_step, make_serve_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _tcfg(cfg: ModelConfig) -> TrainConfig:
+    name = "momentum" if cfg.family == "resnet" else "adamw"
+    return TrainConfig(optimizer=OptimizerConfig(name=name))
+
+
+def _opt_shardings(opt_sds, shard_tree, mesh, opt_name: str):
+    rep = NamedSharding(mesh, P())
+    if opt_name == "momentum":
+        return {"mu": shard_tree}
+    return {"m": shard_tree, "v": shard_tree, "count": rep}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override: Optional[ModelConfig] = None,
+               tcfg_override: Optional[TrainConfig] = None,
+               serve_fsdp: bool = True,
+               serve_param_dtype: Optional[str] = None,
+               mesh_override=None) -> Tuple[Any, Dict]:
+    """Build + lower + compile one cell. Returns (compiled, info dict).
+
+    Hillclimb knobs: tcfg_override carries layout/remat/grad_dtype;
+    serve_fsdp=False pins decode params TP-only (no per-token gathers);
+    mesh_override re-shapes the LOGICAL mesh over the same 256 chips.
+    """
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = build_model(cfg)
+    tcfg = tcfg_override or _tcfg(cfg)
+    layout = tcfg.layout
+
+    boxed = model.abstract_params()
+    params_sds = L.unbox(boxed)
+    if serve_param_dtype is not None and shape.kind == "decode":
+        # serving holds a cast copy of the weights (no optimizer state)
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape,
+                                           jnp.dtype(serve_param_dtype)),
+            params_sds)
+    rep = NamedSharding(mesh, P())
+
+    t0 = time.monotonic()
+    if shape.kind == "train":
+        shard_tree = param_shardings(boxed, cfg, mesh, layout=layout)
+        opt = make_optimizer(tcfg.optimizer)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_shard = _opt_shardings(opt_sds, shard_tree, mesh,
+                                   tcfg.optimizer.name)
+        state_sds = TrainState(params=params_sds, opt=opt_sds,
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_shard = TrainState(params=shard_tree, opt=opt_shard, step=rep)
+        batch_sds = S.train_batch_specs(cfg, shape)
+        batch_shard = S.batch_shardings(batch_sds, mesh, layout)
+        lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+
+        zero1_mask = jax.tree.map(lambda b: "experts" not in b.axes, boxed,
+                                  is_leaf=L.is_boxed)
+        step_fn = make_train_step(model, tcfg, param_shardings=shard_tree,
+                                  zero1_mask=zero1_mask)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_shard, batch_shard, rep),
+                         out_shardings=(state_shard, None))
+        with use_mesh(mesh, layout):
+            lowered = jitted.lower(state_sds, batch_sds, lr_sds)
+
+    elif shape.kind == "prefill":
+        shard_tree = param_shardings(boxed, cfg, mesh, layout=layout)
+        batch_sds = S.train_batch_specs(cfg, shape)
+        batch_shard = S.batch_shardings(batch_sds, mesh, layout)
+
+        def prefill_step(params, batch):
+            logits, _ = model.apply(params, batch, remat=False)
+            return logits
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(shard_tree, batch_shard),
+                         out_shardings=None)
+        with use_mesh(mesh, layout):
+            lowered = jitted.lower(params_sds, batch_sds)
+
+    else:                                     # decode
+        shard_tree = param_shardings(boxed, cfg, mesh, fsdp=serve_fsdp,
+                                     layout=layout)
+        cache_sds = S.cache_specs(model, cfg, shape)
+        cache_shard = S.cache_shardings(cache_sds, mesh, cfg)
+        tok_sds = S.decode_token_specs(cfg, shape)
+        tok_shard = S.token_sharding(tok_sds, mesh)
+
+        serve_fn = make_serve_step(model)
+        jitted = jax.jit(serve_fn,
+                         in_shardings=(shard_tree, cache_shard, tok_shard),
+                         out_shardings=(None, cache_shard))
+        with use_mesh(mesh, layout):
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds)
+
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        tokens /= 2           # enc and dec halves each see half the tokens
+    mflops = model_flops(cfg.param_count(), cfg.active_param_count(),
+                         tokens, shape.kind)
+    if mesh_override is not None:
+        mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    from repro import analytic
+    a_flops = analytic.step_flops(cfg, shape, remat=tcfg.remat)
+    mem = analytic.step_hbm_bytes(model, cfg, shape, mesh, tcfg=tcfg,
+                                  serve_fsdp=serve_fsdp)
+    report = build_report(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                          chips=chips, compiled=compiled, mflops=mflops,
+                          analytic_flops=a_flops, analytic_bytes=mem.total)
+    report.memory_breakdown = {
+        "params": mem.params, "grads_opt": mem.grads_opt,
+        "activations": mem.activations, "attn_scores": mem.attn_scores,
+        "kv_cache": mem.kv_cache}
+    info = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "kind": shape.kind,
+        "layout": layout, "remat": tcfg.remat, "grad_dtype": tcfg.grad_dtype,
+        "serve_fsdp": serve_fsdp, "attn_impl": cfg.attn_impl,
+        "t_lower_s": t_lower, "t_compile_s": t_compile,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "roofline": report.to_json(),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        info["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:                     # pragma: no cover
+        info["memory_analysis"] = {"error": str(e)}
+    return compiled, info
+
+
+def optimized_overrides(arch: str, shape: ShapeConfig, multi_pod: bool
+                        ) -> Dict[str, Any]:
+    """Best-known-config per cell kind from the §Perf hillclimb.
+
+    train: zero1 layout + bf16 grads + no remat (+ a2a EP for MoE) when
+    the global batch flattens over the mesh; prefill/decode: TP-resident
+    weights (no FSDP gathers), bf16 weight streaming for decode.
+    """
+    cfg = get_config(arch)
+    chips = 512 if multi_pod else 256
+    kw: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if shape.global_batch % chips == 0:
+            tcfg = TrainConfig(optimizer=OptimizerConfig(name="adamw"),
+                               layout="zero1", grad_dtype="bfloat16",
+                               remat="none")
+            kw["tcfg_override"] = tcfg
+            if cfg.family == "moe":
+                kw["cfg_override"] = cfg.replace(moe_impl="a2a")
+        else:
+            kw["tcfg_override"] = TrainConfig(
+                optimizer=OptimizerConfig(name="adamw"),
+                grad_dtype="bfloat16")
+            if cfg.family == "moe":
+                kw["cfg_override"] = cfg.replace(moe_impl="ep")
+    elif shape.kind == "prefill":
+        kw["serve_fsdp"] = False            # weights TP-resident
+        if cfg.family == "moe":
+            kw["cfg_override"] = cfg.replace(moe_impl="ep")
+    else:                                   # decode
+        kw["serve_fsdp"] = False
+        kw["serve_param_dtype"] = "bfloat16"
+    return kw
+
+
+def run_cells(archs, shapes, meshes, out_dir: str,
+              stop_on_error: bool = False, optimized: bool = False) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    failures = 0
+    reports = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            ok, reason = shape_applicable(arch, shape, cfg.family)
+            if not ok:
+                print(f"SKIP  {arch:24s} {shape_name:12s} -- {reason}")
+                path = os.path.join(out_dir, f"{arch}_{shape_name}_skip.json")
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape_name,
+                               "skipped": True, "reason": reason}, f, indent=1)
+                continue
+            for mesh_kind in meshes:
+                multi = mesh_kind == "multi"
+                mesh_name = "2x16x16" if multi else "16x16"
+                tag = f"{arch}_{shape_name}_{mesh_name}"
+                if optimized:
+                    tag += "_opt"
+                t0 = time.monotonic()
+                try:
+                    kw = (optimized_overrides(arch, shape, multi)
+                          if optimized else {})
+                    compiled, info = lower_cell(arch, shape_name,
+                                                multi_pod=multi, **kw)
+                    r = info["roofline"]
+                    print(f"OK    {arch:24s} {shape_name:12s} {mesh_name:8s} "
+                          f"compile={info['t_compile_s']:6.1f}s "
+                          f"bound={r['bottleneck']:<10s} "
+                          f"t={max(r['t_compute'], r['t_memory'], r['t_collective'])*1e3:8.2f}ms "
+                          f"useful={r['useful_flops_ratio']:.2f}")
+                    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                        json.dump(info, f, indent=1)
+                    reports.append(info)
+                    del compiled
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL  {arch:24s} {shape_name:12s} {mesh_name:8s} "
+                          f"({time.monotonic()-t0:.1f}s): "
+                          f"{type(e).__name__}: {str(e)[:200]}")
+                    with open(os.path.join(out_dir, tag + "_FAIL.json"),
+                              "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name, "error": str(e),
+                                   "traceback": traceback.format_exc()},
+                                  f, indent=1)
+                    if stop_on_error:
+                        raise
+    print(f"\n{len(reports)} cells OK, {failures} failed.")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="every assigned arch x shape")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    ap.add_argument("--stop-on-error", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the best-known per-kind config from §Perf")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires the 512 forced host devices; do not import jax "
+        "before this module sets XLA_FLAGS")
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    failures = run_cells(archs, shapes, meshes, args.out,
+                         stop_on_error=args.stop_on_error,
+                         optimized=args.optimized)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct stand-ins + sharding specs for every dry-run cell.
+
+``input_specs(cfg, shape)`` produces the exact abstract inputs that
+``train_step`` / ``serve_step`` take for an (arch x input-shape) cell —
+weak-type-correct, shardable, zero allocation (everything goes through
+``jax.eval_shape`` over the same constructors the real pipeline uses, so
+specs can never drift from real batches).
+
+``batch_shardings`` / ``cache_shardings`` map those inputs onto the mesh:
+batch rows over the data axes; KV caches batch-first, falling back to
+*sequence* sharding for long-context decode (long_500k has B=1 — the cache
+IS the memory footprint, so its 512k axis shards over ``data``); SSM/RWKV
+states shard heads over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch
+from repro.models import modality
+from repro.models.builder import Model
+from repro.sharding import data_axes, data_size
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    return dict(jax.eval_shape(
+        lambda: make_batch(cfg, shape.global_batch, shape.seq_len)))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(model: Model, cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    enc_len = 0
+    if cfg.family == "encdec":
+        enc_len, _ = modality.encdec_split(cfg, shape.seq_len)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 enc_len=enc_len))
+
+
+def input_specs(model: Model, cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract inputs for the cell's step function.
+
+    train/prefill -> {"batch": ...};  decode -> {"cache": ..., "tokens": ...}
+    """
+    if shape.kind in ("train", "prefill"):
+        return {"batch": train_batch_specs(cfg, shape)}
+    return {"cache": cache_specs(model, cfg, shape),
+            "tokens": decode_token_specs(cfg, shape)}
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _dspec(mesh: Mesh, layout: str = "tp"):
+    dax = data_axes(mesh, layout)
+    return dax if len(dax) > 1 else dax[0]
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                    layout: str = "tp") -> Dict[str, NamedSharding]:
+    """Batch-dim over the data-parallel axes (ALL axes for the fsdp
+    layout); everything else replicated."""
+    d = _dspec(mesh, layout)
+
+    def one(s: jax.ShapeDtypeStruct) -> NamedSharding:
+        if s.shape and s.shape[0] % data_size(mesh, layout) == 0:
+            return NamedSharding(mesh, P(d, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return {k: one(v) for k, v in specs.items()}
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh, cfg: ModelConfig) -> PyTree:
+    """Decode-cache layout rules, keyed on leaf path + shape.
+
+    Leading axis of every leaf is the stacked-layer dim (never sharded —
+    the decode scan walks it). Preference order per leaf:
+      1. batch axis over data (decode_32k: B=128)
+      2. sequence axis over data (long_500k: B=1, S=512k dominates memory)
+      3. head-like axis over model (KV heads / SSM heads) when divisible
+    """
+    d = _dspec(mesh)
+    dsz = data_size(mesh)
+    msz = mesh.shape["model"]
+
+    def leaf_spec(path: str, s: jax.ShapeDtypeStruct) -> P:
+        entries: list = [None] * len(s.shape)
+        if not s.shape:
+            return P()
+        if path.endswith("pos"):
+            return P()
+        # identify axes by role
+        if any(t in path for t in ("kv", "xk", "xv")) and len(s.shape) == 5:
+            # (nl, B, S, KV, Dh)
+            nl, B, S, KV, Dh = s.shape
+            if B % dsz == 0:
+                entries[1] = d
+            elif S % dsz == 0:
+                entries[2] = d
+            if KV % msz == 0 and KV > 1:
+                entries[3] = "model"
+            return P(*entries)
+        if "state" in path:
+            # mamba2 (nb, cad, B, H, N, P) or (nl, B, H, N, P)
+            h_ax = len(s.shape) - 3
+            if s.shape[h_ax] % msz == 0:
+                entries[h_ax] = "model"
+            b_ax = h_ax - 1
+            if s.shape[b_ax] % dsz == 0:
+                entries[b_ax] = d
+            return P(*entries)
+        if "wkv" in path:
+            # (nl, B, H, Dh, Dh)
+            if s.shape[2] % msz == 0:
+                entries[2] = "model"
+            if s.shape[1] % dsz == 0:
+                entries[1] = d
+            return P(*entries)
+        if "conv" in path and len(s.shape) >= 4:
+            if s.shape[-1] % msz == 0:
+                entries[-1] = "model"
+            return P(*entries)
+        if "tok" in path and len(s.shape) == 4:
+            if s.shape[1] % dsz == 0:
+                entries[1] = d
+            return P(*entries)
+        return P(*entries)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    treedef = jax.tree.structure(cache)
+    out = []
+    for path, leaf in paths_leaves:
+        pstr = "/".join(str(k) for k in path)
+        out.append(NamedSharding(mesh, leaf_spec(pstr, leaf)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def token_sharding(spec: jax.ShapeDtypeStruct, mesh: Mesh) -> NamedSharding:
+    if spec.shape[0] % data_size(mesh) == 0:
+        return NamedSharding(mesh, P(_dspec(mesh), None))
+    return NamedSharding(mesh, P())

@@ -1,0 +1,2 @@
+from repro.models import layers, attention, ffn, ssm, rwkv, transformer, resnet, modality  # noqa: F401
+from repro.models.builder import build_model, Model  # noqa: F401

@@ -1,0 +1,176 @@
+"""GQA/MQA/MHA attention: training/prefill (blockwise) and decode paths.
+
+The XLA path computes attention in query chunks (``cfg.attn_chunk``) so the
+materialized score block is (B, kvh, g, Cq, Skv) instead of the full
+(B, H, S, S) — the jnp analogue of a flash kernel's HBM footprint. The
+Pallas fast path lives in ``repro.kernels`` and is selected with
+``cfg.attn_impl == "pallas"``.
+
+Sliding windows are passed as *per-layer runtime scalars* so a scan over
+layers can mix local and global layers (gemma3's 5:1 pattern):
+``window <= 0`` means full (global) attention.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(kg: L.KeyGen, cfg: ModelConfig) -> Dict[str, L.Boxed]:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": L.param(kg, (d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": L.param(kg, (d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": L.param(kg, (d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": L.param(kg, (H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = L.param(kg, (H, Dh), ("heads", "head_dim"), init="zeros")
+        p["bk"] = L.param(kg, (KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = L.param(kg, (KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def project_qkv(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                positions: Optional[jax.Array] = None,
+                mrope_positions: Optional[jax.Array] = None,
+                rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> q (B,S,H,Dh), k/v (B,S,KV,Dh), rotary applied."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope:
+        if cfg.use_mrope and mrope_positions is not None:
+            q = L.apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = L.apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            if positions is None:
+                positions = jnp.arange(x.shape[1])[None, :]
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(p: Dict[str, jax.Array], attn: jax.Array) -> jax.Array:
+    """attn: (B, S, H, Dh) -> (B, S, d)."""
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise full attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _chunk_attend(q_chunk: jax.Array, k: jax.Array, v: jax.Array,
+                  q_off: jax.Array, *, causal: bool, window: jax.Array,
+                  kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q_chunk: (B, Cq, KV, G, Dh); k/v: (B, Skv, KV, Dh). Returns (B,Cq,KV,G,Dh).
+
+    ``window`` is a runtime scalar (<=0 -> global). ``kv_len`` optionally
+    masks padded kv positions (cross-attention / ragged batches).
+    """
+    Dh = q_chunk.shape[-1]
+    scale = Dh ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q_chunk, k).astype(jnp.float32)
+    scores = scores * scale
+    Skv = k.shape[1]
+    kj = jnp.arange(Skv)
+    mask = jnp.ones(scores.shape[-2:], dtype=bool)
+    if causal:
+        qi = q_off + jnp.arange(q_chunk.shape[1])
+        cmask = kj[None, :] <= qi[:, None]
+        wmask = jnp.where(window > 0, kj[None, :] > qi[:, None] - window, True)
+        mask = cmask & wmask
+    if kv_len is not None:
+        mask = mask & (kj[None, :] < kv_len)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig, *,
+           causal: bool = True, window=0,
+           kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Full attention, q-chunked. q: (B,S,H,Dh), k/v: (B,Skv,KV,Dh)."""
+    if cfg.attn_impl == "pallas" and kv_len is None:
+        from repro.kernels.flash_attention.ops import attention as flash
+        return flash(q, k, v, causal=causal, window=window)
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    window = jnp.asarray(window, jnp.int32)
+    qg = q.reshape(B, S, KV, G, Dh)
+
+    C = min(cfg.attn_chunk, S)
+    if S % C != 0:  # smoke-test shapes; fall back to one chunk
+        C = S
+    n = S // C
+    if n == 1:
+        out = _chunk_attend(qg, k, v, jnp.asarray(0), causal=causal,
+                            window=window, kv_len=kv_len)
+        return out.reshape(B, S, H, Dh)
+
+    qcs = qg.reshape(B, n, C, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    offs = jnp.arange(n) * C
+
+    def body(_, xs):
+        qc, off = xs
+        return None, _chunk_attend(qc, k, v, off, causal=causal,
+                                   window=window, kv_len=kv_len)
+
+    _, outs = jax.lax.scan(body, None, (qcs, offs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, Dh)
+    return out.reshape(B, S, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  pos: jax.Array, *, window=0, impl: str = "xla") -> jax.Array:
+    """q: (B,1,H,Dh); caches: (B,Smax,KV,Dh); pos: (B,) current index.
+
+    Attends over cache[0..pos] (inclusive: the new token is already written).
+    """
+    if impl == "pallas":
+        from repro.kernels.decode_attention.ops import decode_attend
+        return decode_attend(q, k_cache, v_cache, pos + 1, window=window)
+    B, _, H, Dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    window = jnp.asarray(window, jnp.int32)
+    qg = q.reshape(B, KV, G, Dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores * (Dh ** -0.5)
+    kj = jnp.arange(k_cache.shape[1])
+    mask = kj[None, :] <= pos[:, None]
+    mask = mask & jnp.where(window > 0, kj[None, :] > pos[:, None] - window, True)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
+    return out.reshape(B, 1, H, Dh)
+
+
+def update_cache(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pos: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Write (B,1,KV,Dh) new entries at per-row positions (B,)."""
+    B = k_cache.shape[0]
+    rows = jnp.arange(B)
+    k_cache = k_cache.at[rows, pos].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, pos].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache

@@ -1,0 +1,55 @@
+"""Model builder: family dispatch + abstract (allocation-free) init.
+
+``build_model(cfg)`` returns a :class:`Model` with a uniform callable
+surface, so the train/serve/dryrun layers never branch on family.
+``abstract_params`` gives the Boxed tree with ShapeDtypeStruct leaves
+(via ``jax.eval_shape``) used to derive shardings without allocating
+anything — the dry-run path at 512 fake devices depends on this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import resnet, transformer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]                # key -> Boxed tree
+    apply: Callable[..., Tuple[jax.Array, jax.Array]]  # (raw_params, batch)
+    init_cache: Optional[Callable[..., PyTree]] = None
+    decode: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
+
+    def abstract_params(self) -> PyTree:
+        """Boxed tree whose .value leaves are ShapeDtypeStructs."""
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return jax.eval_shape(self.init, key)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "resnet":
+        return Model(
+            cfg=cfg,
+            init=lambda key: resnet.init_params(cfg, key),
+            apply=lambda p, batch, remat=False: resnet.forward(p, cfg, batch,
+                                                               remat=remat),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        apply=lambda p, batch, remat=True: transformer.forward(p, cfg, batch,
+                                                               remat=remat),
+        init_cache=lambda batch, max_len, enc_len=0: transformer.init_decode_cache(
+            cfg, batch, max_len, enc_len=enc_len),
+        decode=lambda p, cache, batch: transformer.decode_step(p, cfg, cache,
+                                                               batch),
+    )

@@ -1,0 +1,66 @@
+"""Modality frontend STUBS (per the assignment spec).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE only;
+the actual audio/vision towers are stubbed: ``input_specs()`` provides
+*precomputed* frame/patch embeddings with the right shapes/dtypes, and this
+module generates matching synthetic arrays for smoke tests and examples.
+
+Layout conventions
+------------------
+- qwen2-vl (``vlm``): a prefix of ``modality_prefix_frac`` of the sequence is
+  patch embeddings arranged as a (T=1, H=g, W=g) grid for M-RoPE; the rest
+  are text tokens with sequential (t,t,t) positions continuing after the
+  grid (Qwen2-VL position convention).
+- seamless (``encdec``): the encoder consumes 100% frame embeddings; the
+  decoder consumes target tokens. ``enc_len = dec_len = seq_len // 2`` so one
+  "cell" processes seq_len positions total (recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def vlm_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(num_patch_positions, num_text_positions); patches form a square grid."""
+    want = int(seq_len * cfg.modality_prefix_frac)
+    g = max(1, int(math.sqrt(max(1, want))))
+    n_img = g * g
+    return n_img, seq_len - n_img
+
+
+def encdec_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    enc = max(1, seq_len // 2)
+    return enc, seq_len - enc
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq_len: int) -> jnp.ndarray:
+    """(B, S, 3) (t, h, w) ids: image grid first, then sequential text."""
+    n_img, n_txt = vlm_split(cfg, seq_len)
+    g = int(math.sqrt(n_img))
+    hh, ww = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
+    img = jnp.stack([jnp.zeros(n_img, jnp.int32),
+                     hh.reshape(-1).astype(jnp.int32),
+                     ww.reshape(-1).astype(jnp.int32)], axis=-1)
+    start = g  # text positions continue after max(grid) per Qwen2-VL
+    t = start + jnp.arange(n_txt, dtype=jnp.int32)
+    txt = jnp.stack([t, t, t], axis=-1)
+    pos = jnp.concatenate([img, txt], axis=0)
+    return jnp.broadcast_to(pos[None], (batch, seq_len, 3))
+
+
+def synth_patch_embeds(cfg: ModelConfig, batch: int, n_img: int,
+                       key: jax.Array) -> jnp.ndarray:
+    return jax.random.normal(key, (batch, n_img, cfg.d_model),
+                             jnp.dtype(cfg.dtype)) * 0.02
+
+
+def synth_frame_embeds(cfg: ModelConfig, batch: int, n_frames: int,
+                       key: jax.Array) -> jnp.ndarray:
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model),
+                             jnp.dtype(cfg.dtype)) * 0.02

@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD) block — the zamba2 backbone layer.
+
+Full-sequence path uses the chunked SSD algorithm (intra-chunk quadratic
+attention-like term + inter-chunk state recurrence), all matmuls, which is
+the TPU-friendly form. Decode path is the O(1) single-step state update.
+Decay accumulations run in fp32.
+
+Single B/C group (G=1), conv width 4, Mamba-2 gated-RMSNorm output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+CONV_W = 4
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert H * P == d_in, (H, P, d_in)
+    return d_in, H, P, N
+
+
+def init_mamba2(kg: L.KeyGen, cfg: ModelConfig) -> Dict[str, L.Boxed]:
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "in_proj": L.param(kg, (d, 2 * d_in + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": L.param(kg, (CONV_W, conv_dim), (None, "ssm_inner"), scale=0.5),
+        "conv_b": L.param(kg, (conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": L.param(kg, (H,), ("ssm_heads",), init="zeros"),
+        "D": L.param(kg, (H,), ("ssm_heads",), init="ones"),
+        "dt_bias": L.param(kg, (H,), ("ssm_heads",), init="zeros"),
+        "norm": L.param(kg, (d_in,), ("ssm_inner",), init="zeros"),
+        "out_proj": L.param(kg, (d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_in, H, P, N = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(p, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv width-4 over (B, S, C)."""
+    w = p["conv_w"].astype(u.dtype)
+    pad = jnp.pad(u, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(w[i] * pad[:, i:i + u.shape[1]] for i in range(CONV_W))
+    return jax.nn.silu(out + p["conv_b"].astype(u.dtype))
+
+
+def apply_mamba2(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+                 ) -> jax.Array:
+    """Full-sequence SSD. x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = x.shape
+    d_in, H, P, N = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    dt32 = jnp.float32
+
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(p, conv_in)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    xh = xin.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(dt32) + p["dt_bias"].astype(dt32))  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(dt32))                              # (H,)
+    dA = dt * a                                                        # (B,S,H) <= 0
+    xdt = xh * dt.astype(xh.dtype)[..., None]
+
+    if cfg.ssm_impl == "pallas" and S % Q == 0:
+        from repro.kernels.ssd_scan.ops import ssd
+        y = ssd(xdt, Bc, Cc, dA, chunk=Q)                              # (B,S,H,P)
+        y = y + p["D"].astype(y.dtype)[:, None] * xh
+        y = y.reshape(B, S, d_in)
+        y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+        return y @ p["out_proj"].astype(y.dtype)
+
+    # chunk
+    xdt_c = xdt.reshape(B, nc, Q, H, P)
+    Bc_c = Bc.reshape(B, nc, Q, N)
+    Cc_c = Cc.reshape(B, nc, Q, N)
+    dA_c = dA.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(dA_c, axis=2)                                     # (B,nc,Q,H)
+
+    # intra-chunk: att[b,c,h,i,j] = (C_i . B_j) exp(cum_i - cum_j), j<=i
+    logdec = cum[:, :, :, None, :] - cum[:, :, None, :, :]             # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(logdec), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc_c.astype(dt32), Bc_c.astype(dt32))
+    att = cb[..., None] * dec                                          # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(xh.dtype), xdt_c)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j (x) xdt_j
+    last = cum[:, :, -1:, :]                                           # (B,nc,1,H)
+    sdec = jnp.exp(last - cum)                                         # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                        Bc_c.astype(dt32), sdec, xdt_c.astype(dt32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])                            # (B,nc,H)
+
+    def step(s, inp):
+        dcy, st = inp
+        s_new = s * dcy[:, :, None, None] + st
+        return s_new, s                                                # emit state *before* chunk
+
+    s0 = jnp.zeros((B, H, N, P), dt32)
+    _, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc_c.astype(dt32), jnp.exp(cum), prev_states).astype(xh.dtype)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(B, S, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_in, H, P, N = _dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, conv_dim), dtype),
+    }
+
+
+def decode_mamba2(p: Dict[str, jax.Array], x: jax.Array,
+                  cache: Dict[str, jax.Array], cfg: ModelConfig
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d_model); O(1) state update."""
+    B = x.shape[0]
+    d_in, H, P, N = _dims(cfg)
+    dt32 = jnp.float32
+
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    cur = jnp.concatenate([xin, Bc, Cc], axis=-1)[:, 0]                # (B,conv_dim)
+    w = p["conv_w"].astype(cur.dtype)
+    hist = cache["conv"]
+    conv = sum(w[i] * hist[:, i] for i in range(CONV_W - 1)) + w[-1] * cur
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cur.dtype))
+    xin, Bc, Cc = jnp.split(conv, [d_in, d_in + N], axis=-1)
+
+    xh = xin.reshape(B, H, P)
+    dt = jax.nn.softplus(dt[:, 0].astype(dt32) + p["dt_bias"].astype(dt32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(dt32))
+    dA = jnp.exp(dt * a)                                               # (B,H)
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bc.astype(dt32), dt, xh.astype(dt32))
+    y = jnp.einsum("bn,bhnp->bhp", Cc.astype(dt32), state).astype(xh.dtype)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(B, 1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(y.dtype)
+    new_cache = {
+        "state": state,
+        "conv": jnp.concatenate([hist[:, 1:], cur[:, None]], axis=1),
+    }
+    return out, new_cache

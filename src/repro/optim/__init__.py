@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, sgd_momentum, adamw,
+                                    make_optimizer)  # noqa: F401
+from repro.optim.schedules import (make_schedule, adaptive_lr_scale)  # noqa: F401
+from repro.optim.compression import (topk_compress, topk_decompress,
+                                     ternary_compress, ternary_decompress,
+                                     CompressionState)  # noqa: F401

@@ -1,0 +1,103 @@
+"""Self-contained functional optimizers (no optax dependency).
+
+The paper trains ResNet-32 with SGD-Momentum (Table II); AdamW is provided
+for the LM architectures. Both are pure pytree transforms:
+
+    opt = sgd_momentum(momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+    params = jax.tree.map(lambda p, u: p + u, params, updates)
+
+Optimizer states mirror the param tree leaf-for-leaf, so ZeRO-1 sharding of
+the state falls out of the same logical-axis rules as the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]   # (grads, state, params, lr)
+
+
+def _zeros_like(params: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": _zeros_like(params)}
+
+    def update(grads, state, params, lr):
+        def one(g, mu, p):
+            g = g + weight_decay * p if weight_decay else g
+            mu_new = momentum * mu + g
+            step = g + momentum * mu_new if nesterov else mu_new
+            return -lr * step, mu_new
+        flat = jax.tree.map(one, grads, state["mu"], params)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like(params), "v": _zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * (g * g)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+            return upd, m_new, v_new
+
+        flat = jax.tree.map(one, grads, state["m"], state["v"], params)
+        is3 = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda t: t[0], flat, is_leaf=is3),
+                {"m": jax.tree.map(lambda t: t[1], flat, is_leaf=is3),
+                 "v": jax.tree.map(lambda t: t[2], flat, is_leaf=is3),
+                 "count": count})
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "momentum":
+        return sgd_momentum(cfg.momentum, cfg.weight_decay)
+    if cfg.name == "adamw":
+        return adamw(cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

@@ -1,0 +1,49 @@
+"""LR schedules + the paper's adaptive-LR-by-active-workers rule (C6).
+
+``adaptive_lr_scale`` implements Fig 5's fix: the linear-scaling rule keyed
+to the number of *active* workers rather than the configured maximum. The
+naive behaviour (TF's: scale by configured workers) is what degrades
+accuracy by ~1.17% in dynamic clusters.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ScheduleConfig
+
+
+def make_schedule(cfg: ScheduleConfig):
+    """step -> lr multiplier in [0, 1] (applied on top of base lr)."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+        if cfg.kind == "constant":
+            decay = 1.0
+        elif cfg.kind == "cosine":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+            decay = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (
+                1.0 + jnp.cos(jnp.pi * frac))
+        elif cfg.kind == "step":
+            decay = jnp.asarray(1.0, jnp.float32)
+            for b, f in zip(cfg.step_boundaries, cfg.step_factors):
+                decay = jnp.where(step >= b, f, decay)
+        else:
+            raise ValueError(cfg.kind)
+        return warm * decay
+
+    return fn
+
+
+def adaptive_lr_scale(active_workers, base_workers: int = 1,
+                      adaptive: bool = True, configured_workers: int = 1):
+    """Linear-scaling-rule multiplier.
+
+    adaptive=True  -> scale by the number of currently ACTIVE workers (C6).
+    adaptive=False -> the naive TF behaviour: scale by the CONFIGURED
+                      (maximum-slot) worker count regardless of how many
+                      are actually alive.
+    """
+    if adaptive:
+        return jnp.asarray(active_workers, jnp.float32) / base_workers
+    return jnp.asarray(configured_workers, jnp.float32) / base_workers

@@ -1,0 +1,321 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+This container cannot time a TPU, so the per-cell performance report is
+*derived* from the compiled module (the same way a deployment review reads
+an XLA profile before burning pod-hours):
+
+    compute term    = HLO_FLOPs / (peak bf16 FLOP/s)        [per device]
+    memory term     = HLO_bytes / HBM bandwidth             [per device]
+    collective term = wire bytes / ICI bandwidth            [per device]
+
+FLOPs and bytes-accessed come from ``compiled.cost_analysis()`` (the
+post-SPMD per-device module). Collective wire bytes are NOT in
+cost_analysis: we parse the optimized HLO (``compiled.as_text()``) and
+apply ring-algorithm wire models per op:
+
+    all-reduce      2 * S * (n-1)/n        (reduce-scatter + all-gather)
+    all-gather      S * (n-1)/n            (S = gathered output size)
+    reduce-scatter  S * (n-1)              (S = scattered output size)
+    all-to-all      S * (n-1)/n
+    collective-permute  S
+
+where n = participants per replica group (parsed from the op). The
+dominant term approximates step time on the target (v5e-class) chip; the
+MODEL_FLOPS / HLO_FLOPs ratio flags remat/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# Target-hardware constants (per task spec: TPU v5e-class)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (per-device injection est.)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.5 = f32[448,4864]{1,0} all-reduce(...), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?|replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:                                       # iota form [ngroups, size]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{(.*?)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    out_bytes: int
+    group: int
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-model bytes crossing a device's links for this op."""
+        n, s = max(2, self.group), self.out_bytes
+        if self.kind == "all-reduce":
+            return 2 * s * (n - 1) / n
+        if self.kind == "all-gather":
+            return s * (n - 1) / n
+        if self.kind == "reduce-scatter":
+            return s * (n - 1)
+        if self.kind == "all-to-all":
+            return s * (n - 1) / n
+        return float(s)                          # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out: List[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        out.append(Collective(kind=m.group(3),
+                              out_bytes=_shape_bytes(shape_str),
+                              group=_group_size(line)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware collective accounting
+# ---------------------------------------------------------------------------
+# XLA's cost model (and a naive text scan) sees a lax.scan body ONCE, but a
+# collective inside the scanned layer body executes num_layers times per
+# step. We reconstruct trip counts from the optimized HLO: find `while`
+# ops, read the loop bound from the condition computation's constant, and
+# multiply every collective inside the body computation (recursively — the
+# q-chunk scan nests inside the layer scan).
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(|\{)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)"
+    r"(?=.*condition=%?([\w\.\-]+))(?=.*body=%?([\w\.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and ("{" in line):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    joined = {k: "\n".join(v) for k, v in comps.items()}
+    if entry:
+        joined["__entry__"] = joined.get(entry, "")
+        joined["__entry_name__"] = entry
+    return joined
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(m.group(1)) for m in _CONST_RE.finditer(cond_text)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives_loop_aware(hlo_text: str) -> List[Tuple[Collective, int]]:
+    """[(collective, trip_multiplier)] with scan trip counts applied."""
+    comps = _split_computations(hlo_text)
+    entry = comps.get("__entry_name__")
+    if entry is None:
+        return [(c, 1) for c in parse_collectives(hlo_text)]
+
+    mult: Dict[str, int] = {entry: 1}
+    # Propagate multipliers through while edges (queue over comps seen).
+    work = [entry]
+    seen = set()
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        body_text = comps.get(name, "")
+        m_here = mult.get(name, 1)
+        for wm in _WHILE_RE.finditer(body_text):
+            cond, body = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            mult[body] = mult.get(body, 0) or m_here * trips
+            work.append(body)
+
+    out: List[Tuple[Collective, int]] = []
+    for name, m_val in mult.items():       # entry + reachable while bodies
+        for c in parse_collectives(comps.get(name, "")):
+            out.append((c, m_val))
+    return out
+
+
+def cost_props(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # per device
+    hlo_bytes: float                 # per device
+    wire_bytes: float                # per device
+    model_flops: float               # 6 N D (global, useful math)
+    collectives: Dict[str, Dict[str, float]]
+    peak_memory_bytes: Optional[float] = None
+    raw_cost_analysis: Optional[Dict[str, float]] = None
+    memory_breakdown: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs): remat/padding/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput at the bound, as a fraction of peak."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS_BF16
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """6 N D (training) / 2 N D (inference) with N = active params."""
+    n = active_param_count
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, chips: int,
+                 compiled, mflops: float,
+                 analytic_flops: Optional[float] = None,
+                 analytic_bytes: Optional[float] = None) -> RooflineReport:
+    """analytic_flops: GLOBAL step flops (analytic.py); analytic_bytes:
+    per-device HBM traffic. When given, they replace cost_analysis numbers
+    (which undercount scan bodies); raw props stay in .raw_cost_analysis."""
+    props = cost_props(compiled)
+    if analytic_flops is not None:
+        hlo_flops = analytic_flops / chips
+    else:
+        hlo_flops = props.get("flops", 0.0)
+    if analytic_bytes is not None:
+        hlo_bytes = analytic_bytes
+    else:
+        hlo_bytes = props.get("bytes accessed", 0.0)
+
+    colls = parse_collectives_loop_aware(compiled.as_text())
+    by_kind: Dict[str, Dict[str, float]] = {}
+    wire = 0.0
+    for c, trips in colls:
+        e = by_kind.setdefault(c.kind, {"count": 0, "executions": 0,
+                                        "out_bytes": 0.0, "wire_bytes": 0.0})
+        e["count"] += 1
+        e["executions"] += trips
+        e["out_bytes"] += c.out_bytes * trips
+        e["wire_bytes"] += c.wire_bytes * trips
+        wire += c.wire_bytes * trips
+
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("temp_size_in_bytes",):
+            if hasattr(ma, attr):
+                peak = float(getattr(ma, attr))
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, wire_bytes=wire,
+        model_flops=mflops, collectives=by_kind, peak_memory_bytes=peak,
+        raw_cost_analysis=props)
+
+
+def format_table(reports: List[RooflineReport]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'mesh':<10}{'t_comp(ms)':>11}"
+           f"{'t_mem(ms)':>11}{'t_coll(ms)':>11}{'bound':>11}"
+           f"{'useful':>8}{'roofline':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r.arch:<24}{r.shape:<13}{r.mesh:<10}"
+            f"{r.t_compute*1e3:>11.2f}{r.t_memory*1e3:>11.2f}"
+            f"{r.t_collective*1e3:>11.2f}{r.bottleneck:>11}"
+            f"{r.useful_flops_ratio:>8.2f}{r.roofline_fraction:>9.3f}")
+    return "\n".join(lines)

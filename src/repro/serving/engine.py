@@ -1,0 +1,131 @@
+"""Batched serving engine with slot-based continuous batching.
+
+The serving analogue of sparse mapping: a fixed-capacity slot array whose
+occupancy is runtime data, so one compiled ``serve_step`` serves any mix of
+active requests — requests join/retire without recompilation, exactly how
+worker slots join/leave the elastic training cluster. A revoked serving
+replica loses only its in-flight tokens; prompts are re-enqueued by the
+front-end (the decode cache is reconstructible state, never checkpointed).
+
+Decode runs one token per step across all active slots; finished rows are
+masked. Prefill feeds prompt tokens through the same decode path (correct
+for every family incl. SSM/hybrid state caches; a blocked prefill via
+``forward`` is the throughput path used by the prefill benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.builder import Model
+from repro.train.step import make_serve_step
+
+PyTree = dict
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # runtime
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: PyTree, *, max_batch: int,
+                 max_len: int):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model.init_cache(max_batch, max_len)
+        self.step_fn = jax.jit(make_serve_step(model))
+        self._decode = jax.jit(model.decode)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._pending: List[Request] = []
+        self._prefill_cursor: Dict[int, int] = {}       # slot -> prompt index
+        self.tokens_decoded = 0
+
+    # -- request management --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def _reset_row(self, row: int) -> None:
+        """Zero every cache leaf at this batch row (a new occupant must not
+        see the previous request's SSM/RWKV state or KV remnants)."""
+        def zero_row(leaf):
+            if leaf.ndim == 1 and leaf.shape[0] == self.max_batch:
+                return leaf.at[row].set(0)
+            for ax in (1, 2):
+                if leaf.ndim > ax and leaf.shape[ax] == self.max_batch:
+                    idx = (slice(None),) * ax + (row,)
+                    return leaf.at[idx].set(0)
+            return leaf
+        self.cache = jax.tree.map(zero_row, self.cache)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is None and self._pending:
+                req = self._pending.pop(0)
+                self.slots[i] = req
+                self._prefill_cursor[i] = 0
+                self._reset_row(i)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def has_work(self) -> bool:
+        return self.n_active > 0 or bool(self._pending)
+
+    # -- one engine step -----------------------------------------------------
+    def step(self) -> None:
+        """Admit, build the token row per slot, run serve_step, retire."""
+        self._admit()
+        if self.n_active == 0:
+            return
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        in_prefill = np.zeros((self.max_batch,), bool)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = self._prefill_cursor[i]
+            if cur < len(req.prompt):
+                tokens[i, 0] = req.prompt[cur]
+                in_prefill[i] = True
+            else:
+                tokens[i, 0] = (req.generated[-1] if req.generated
+                                else req.prompt[-1])
+        nxt, self.cache = self.step_fn(self.params, self.cache,
+                                       jnp.asarray(tokens))
+        nxt = np.asarray(nxt)
+
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if in_prefill[i]:
+                self._prefill_cursor[i] += 1
+                continue
+            tok = int(nxt[i, 0])
+            req.generated.append(tok)
+            self.tokens_decoded += 1
+            pos = int(np.asarray(self.cache["pos"])[i])
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.generated) >= req.max_new_tokens
+                    or pos >= self.max_len - 1):
+                req.done = True
+                self.slots[i] = None
+
+    def run_to_completion(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,3 @@
+from repro.train.step import (TrainState, make_train_step, make_serve_step,
+                              loss_fn, init_state)  # noqa: F401
+from repro.train.trainer import Trainer  # noqa: F401

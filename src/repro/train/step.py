@@ -1,0 +1,207 @@
+"""train_step / serve_step factories.
+
+``make_train_step`` builds the jittable SPMD step: loss -> grad (with remat
+inside the model's scan-over-layers) -> clip -> LR schedule x adaptive
+worker scale -> optimizer update. Microbatching accumulates gradients with
+``lax.scan`` so the activation peak is one microbatch while collectives
+amortize over the full batch. The adaptive-LR multiplier (paper C6) enters
+as a *runtime scalar* so elastic membership changes never recompile.
+
+Cross-entropy uses the one-hot/elementwise form: with logits sharded
+(batch over 'data', vocab over 'model'), the one-hot product keeps every
+op elementwise + reduction on the existing layout, so GSPMD inserts one
+small all-reduce instead of re-gathering the (B, S, V) logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import modality
+from repro.models.builder import Model
+from repro.optim import make_optimizer, make_schedule
+from repro.optim.optimizers import clip_by_global_norm
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: PyTree
+    step: jax.Array          # int32 scalar
+
+
+def init_state(model: Model, tcfg: TrainConfig, key: jax.Array,
+               unboxed_params: Optional[PyTree] = None) -> TrainState:
+    from repro.models import layers as L
+    params = unboxed_params if unboxed_params is not None \
+        else L.unbox(model.init(key))
+    opt = make_optimizer(tcfg.optimizer).init(params)
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _token_weights(cfg: ModelConfig, batch: Dict[str, jax.Array],
+                   S: int) -> jax.Array:
+    """Per-position loss weights; masks the VLM image prefix."""
+    if cfg.family == "vlm":
+        n_img, _ = modality.vlm_split(cfg, S)
+        pos = jnp.arange(S)
+        return (pos >= n_img).astype(jnp.float32)[None, :]
+    return jnp.ones((1, S), jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """Stable CE via one-hot (keeps the sharded (B,S,V) layout intact)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(onehot * logits, axis=-1)
+    nll = lse - gold
+    if weights is None:
+        return nll.mean()
+    w = jnp.broadcast_to(weights, nll.shape)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def loss_fn(model: Model, params: PyTree, batch: Dict[str, jax.Array],
+            tcfg: TrainConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cfg = model.cfg
+    remat = tcfg.remat != "none"
+    logits, aux = model.apply(params, batch, remat=remat)
+    if cfg.family == "resnet":
+        loss = cross_entropy(logits, batch["labels"])
+    else:
+        S = logits.shape[1]
+        w = _token_weights(cfg, batch, S)
+        loss = cross_entropy(logits, batch["labels"], w)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, tcfg: TrainConfig, param_shardings=None,
+                    zero1_mask=None
+                    ) -> Callable[..., Tuple[TrainState, Dict[str, jax.Array]]]:
+    """``param_shardings`` (optional tree of NamedShardings matching the
+    params) unlocks the SPMD communication controls:
+
+    - gradients are pinned to the param sharding BEFORE the fp32 cast, so
+      the DP reduction is a reduce-scatter at ``tcfg.grad_dtype`` (bf16
+      halves the wire) instead of GSPMD's fp32 all-reduce after the cast;
+    - layout "zero1": the bf16 compute copy is gathered ONCE per step
+      (replicated through fwd+bwd) — per-layer FSDP gathers collapse to a
+      single params-sized all-gather. ``zero1_mask`` (bool tree, optional)
+      limits the gather to selected leaves: expert weights stay EP-sharded
+      (gathering every expert to every device would undo EP).
+    """
+    opt = make_optimizer(tcfg.optimizer)
+    sched = make_schedule(tcfg.schedule)
+    base_lr = tcfg.optimizer.lr
+
+    replicated = None
+    if param_shardings is not None and tcfg.layout == "zero1":
+        from jax.sharding import NamedSharding, PartitionSpec
+        mask = zero1_mask if zero1_mask is not None else jax.tree.map(
+            lambda s: True, param_shardings)
+        replicated = jax.tree.map(
+            lambda s, m: (NamedSharding(s.mesh, PartitionSpec())
+                          if m else s),
+            param_shardings, mask)
+
+    def grads_of(params, batch):
+        compute_dt = (jnp.bfloat16 if tcfg.grad_dtype == "bfloat16"
+                      else None)
+        p = params
+        if compute_dt is not None:
+            # Differentiate wrt a bf16 view: the grad reduce then moves
+            # bf16 on the wire; the fp32 master update happens after the
+            # cast-back. Pin the cast output to the PARAM sharding so the
+            # downcast happens shard-local, BEFORE any gather.
+            p = jax.tree.map(lambda q: q.astype(compute_dt), p)
+            if param_shardings is not None:
+                p = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 p, param_shardings)
+        if replicated is not None:
+            # ZeRO-1: gather the compute copy once; fwd/bwd reuse it.
+            p = jax.tree.map(jax.lax.with_sharding_constraint, p, replicated)
+        (_, metrics), grads = jax.value_and_grad(
+            lambda q: loss_fn(model, q, batch, tcfg), has_aux=True)(p)
+        if param_shardings is not None:
+            # pin the DP reduction (reduce-scatter to the param shard) at
+            # the compute dtype, before any cast widens the wire
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, param_shardings)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array],
+                   lr_scale: jax.Array = jnp.float32(1.0)
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        k = tcfg.microbatches
+        if k > 1:
+            def mb(carry, mbatch):
+                g_acc, m_acc = carry
+                g, m = grads_of(state.params, mbatch)
+                g_acc = jax.tree.map(lambda a, b: a + b / k, g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b / k, m_acc, m)
+                return (g_acc, m_acc), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+            zeros_g = jax.tree.map(jnp.zeros_like, state.params)
+            zeros_m = {"loss": jnp.float32(0), "aux": jnp.float32(0)}
+            (grads, metrics), _ = jax.lax.scan(mb, (zeros_g, zeros_m), split)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if tcfg.optimizer.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+        else:
+            from repro.optim.optimizers import global_norm
+            gnorm = global_norm(grads)
+
+        lr = base_lr * sched(state.step) * lr_scale
+        updates, new_opt = opt.update(grads, state.opt, state.params, lr)
+        new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  state.params, updates)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve_step (decode)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model: Model, *, sample: str = "greedy"
+                    ) -> Callable[..., Tuple[jax.Array, PyTree]]:
+    """One-token decode step: (params, cache, tokens (B,1)) -> (next, cache)."""
+
+    def serve_step(params: PyTree, cache: PyTree, tokens: jax.Array
+                   ) -> Tuple[jax.Array, PyTree]:
+        logits, cache = model.decode(params, cache, {"tokens": tokens})
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], cache
+
+    return serve_step

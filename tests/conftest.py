@@ -1,0 +1,6 @@
+# Tests run on the single real CPU device — no XLA_FLAGS here (the 512
+# placeholder devices are exclusively the dry-run entry point's business).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

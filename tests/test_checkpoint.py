@@ -1,0 +1,107 @@
+"""Master-less checkpointing: roundtrip, corruption fallback, fast-save,
+mid-write revocation (paper C2)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (8, 8)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.float32)},
+            "step_scalar": jnp.int32(7)}
+
+
+def _trees_equal(a, b):
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), a, b)))
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), replicas=2)
+    t = _tree()
+    assert mgr.save(10, t) == 2
+    step, restored, extra = mgr.restore_latest()
+    assert step == 10
+    assert _trees_equal(t, restored)
+
+
+def test_newest_wins_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), replicas=2, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    step, restored, _ = mgr.restore_latest()
+    assert step == 4
+    assert _trees_equal(_tree(4), restored)
+    kept = sorted(os.listdir(tmp_path / "worker_0"))
+    assert len(kept) == 2                                 # gc'd to keep=2
+
+
+def test_corrupted_replica_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), replicas=2)
+    mgr.save(5, _tree(5))
+    # corrupt the newest copy in replica 0
+    p = tmp_path / "worker_0" / "step_0000000005" / "state.pkl"
+    p.write_bytes(b"garbage")
+    step, restored, _ = mgr.restore_latest()
+    assert step == 5                                      # replica 1 serves
+    assert _trees_equal(_tree(5), restored)
+
+
+def test_all_replicas_corrupt_falls_back_to_older_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), replicas=2)
+    mgr.save(5, _tree(5))
+    mgr.save(6, _tree(6))
+    for r in (0, 1):
+        p = tmp_path / f"worker_{r}" / "step_0000000006" / "state.pkl"
+        p.write_bytes(b"garbage")
+    step, restored, _ = mgr.restore_latest()
+    assert step == 5
+    assert _trees_equal(_tree(5), restored)
+
+
+def test_mid_write_revocation_never_corrupts(tmp_path):
+    """A worker killed mid-write must leave no torn checkpoint behind."""
+    mgr = CheckpointManager(str(tmp_path), replicas=1)
+    mgr.save(1, _tree(1))
+    mgr.fail_after_bytes = 64                  # simulated revocation
+    with pytest.raises(RuntimeError):
+        mgr.save(2, _tree(2))
+    mgr.fail_after_bytes = None
+    step, restored, _ = mgr.restore_latest()
+    assert step == 1                           # torn write invisible
+    assert _trees_equal(_tree(1), restored)
+    # no stray tmp dirs leak
+    assert not [d for d in os.listdir(tmp_path / "worker_0")
+                if d.startswith(".tmp")]
+
+
+def test_fast_save_single_replica(tmp_path):
+    """The 30-second warning path: one fsync'd replica, restorable."""
+    mgr = CheckpointManager(str(tmp_path), replicas=3)
+    wrote = mgr.save(42, _tree(42), fast=True,
+                     extra={"reason": "revocation_warning"})
+    assert wrote == 1
+    step, restored, extra = mgr.restore_latest()
+    assert step == 42 and extra["reason"] == "revocation_warning"
+
+
+def test_partial_replica_failure_still_succeeds(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path), replicas=2)
+    orig = mgr._write_one
+    calls = {"n": 0}
+
+    def flaky(rdir, step, payload, meta):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("disk gone (revoked)")
+        return orig(rdir, step, payload, meta)
+
+    monkeypatch.setattr(mgr, "_write_one", flaky)
+    assert mgr.save(7, _tree(7)) == 1          # one replica survived
+    assert mgr.restore_latest()[0] == 7

@@ -1,0 +1,67 @@
+"""SparseCluster invariants (property-based): the sparse-mapping contract."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import SlotState, SparseCluster
+
+
+@given(max_slots=st.integers(1, 24), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_shard_assignment_partitions(max_slots, data):
+    """Active shard ownership is an exact partition of {0..max_slots-1}."""
+    c = SparseCluster(max_slots)
+    n_active = data.draw(st.integers(1, max_slots))
+    slots = data.draw(st.permutations(range(max_slots)))[:n_active]
+    for s in slots:
+        c.fill_and_activate(s, step=0)
+    owned = c.shard_assignment()
+    all_shards = sorted(sh for shards in owned.values() for sh in shards)
+    assert all_shards == list(range(max_slots))          # exact cover
+    assert set(owned) == set(slots)                      # only active own
+    for s, shards in owned.items():
+        assert s in shards                               # own shard first
+
+
+@given(max_slots=st.integers(2, 12), data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_membership_version_monotonic(max_slots, data):
+    c = SparseCluster(max_slots)
+    version = c.membership_version
+    ops = data.draw(st.lists(st.integers(0, max_slots - 1), min_size=1,
+                             max_size=20))
+    step = 0
+    for slot in ops:
+        step += 1
+        s = c.slots[slot]
+        if s.state in (SlotState.EMPTY, SlotState.REVOKED):
+            c.fill_and_activate(slot, step)
+        else:
+            c.revoke(slot, step)
+        assert c.membership_version == version + 1
+        version = c.membership_version
+
+
+def test_state_machine_guards():
+    c = SparseCluster(2)
+    with pytest.raises(ValueError):
+        c.activate(0, 0)                    # not pending
+    c.request(0)
+    with pytest.raises(ValueError):
+        c.request(0)                        # already pending
+    c.activate(0, 0)
+    with pytest.raises(ValueError):
+        c.revoke(1, 0)                      # never active
+    c.revoke(0, 1)
+    c.fill_and_activate(0, 2)               # revoked slots can refill
+    assert c.n_active == 1
+
+
+def test_rebalance_after_revocation():
+    c = SparseCluster(4)
+    for s in range(4):
+        c.fill_and_activate(s, 0)
+    assert c.shard_assignment() == {0: [0], 1: [1], 2: [2], 3: [3]}
+    c.revoke(2, 10)
+    owned = c.shard_assignment()
+    assert sorted(sh for v in owned.values() for sh in v) == [0, 1, 2, 3]
+    assert 2 not in owned

@@ -1,0 +1,83 @@
+"""Gradient compression (slow-link / pod-axis path): top-k error feedback
+and ternary quantization invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import (CompressionState, compression_bytes_ratio,
+                                     init_state, ternary_compress,
+                                     ternary_decompress, topk_compress,
+                                     topk_decompress)
+
+
+def _grads(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (64, 32)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (128,))}
+
+
+def test_topk_keeps_ratio_fraction():
+    g = _grads()
+    st = init_state(g)
+    kept, st2 = topk_compress(g, st, ratio=0.1)
+    dense = topk_decompress(kept)
+    for key in g:
+        nz = float(jnp.sum(dense[key] != 0))
+        n = g[key].size
+        assert nz <= max(1, int(np.ceil(0.1 * n))) + 1
+
+
+def test_topk_error_feedback_preserves_signal():
+    """residual + sent == original: nothing is lost, only delayed."""
+    g = _grads()
+    st = init_state(g)
+    kept, st2 = topk_compress(g, st, ratio=0.2)
+    dense = topk_decompress(kept)
+    for key in g:
+        recon = dense[key] + st2.error[key]
+        np.testing.assert_allclose(recon, g[key], atol=1e-6)
+
+
+def test_topk_error_drains_over_steps():
+    """With a constant gradient, accumulated error keeps the update
+    unbiased: sum of sent values approaches steps * g."""
+    g = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(32, 16)),
+                          jnp.float32)}
+    st = init_state(g)
+    sent_total = jnp.zeros_like(g["a"])
+    steps = 25
+    for _ in range(steps):
+        kept, st = topk_compress(g, st, ratio=0.1)
+        sent_total = sent_total + topk_decompress(kept)["a"]
+    avg_sent = sent_total / steps
+    # every coordinate eventually ships: relative error shrinks
+    assert float(jnp.mean(jnp.abs(avg_sent - g["a"]))) < \
+        0.5 * float(jnp.mean(jnp.abs(g["a"])))
+
+
+def test_ternary_unbiased():
+    g = {"a": jnp.full((4096,), 0.3)}
+    acc = jnp.zeros((4096,))
+    n = 200
+    for i in range(n):
+        t = ternary_compress(g, jax.random.key(i))
+        acc = acc + ternary_decompress(t)["a"]
+    est = acc / n
+    assert float(jnp.abs(est.mean() - 0.3)) < 0.02
+
+
+def test_ternary_values_are_ternary():
+    g = _grads(2)
+    t = ternary_compress(g, jax.random.key(0))
+    for key in g:
+        scale = float(jnp.max(jnp.abs(g[key])))
+        vals = np.unique(np.round(np.asarray(
+            ternary_decompress(t)[key] / scale), 6))
+        assert set(vals) <= {-1.0, 0.0, 1.0}
+
+
+def test_bytes_ratio():
+    assert compression_bytes_ratio("none") == 1.0
+    assert compression_bytes_ratio("topk", 0.01) < 0.05
+    assert compression_bytes_ratio("ternary") < 0.1

@@ -1,0 +1,118 @@
+"""Budget planner + heterogeneous scheduler invariants (C1/C7/C8)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pricing
+from repro.core.cost import (PlanConfig, enumerate_candidates, estimate,
+                             pareto_front, plan_within_budget)
+from repro.core.scheduler import (CollectiveSchedule, barrier_time,
+                                  collective_schedule, drop_stragglers,
+                                  pick_offers, plan_ps, proportional_shards,
+                                  revocation_risk_rank)
+
+
+# --- budget planner ---------------------------------------------------------
+
+def test_all_plans_within_budget():
+    plans = plan_within_budget(pricing.SINGLE_K80_BUDGET, max_workers=10)
+    assert plans, "no feasible plan under the paper's own budget"
+    assert all(p.cost_usd <= pricing.SINGLE_K80_BUDGET + 1e-9 for p in plans)
+    assert plans == sorted(plans, key=lambda p: p.time_h)
+
+
+def test_transient_dominates_ondemand_on_cost():
+    tr = estimate(PlanConfig((("K80", 4),), transient=True))
+    od = estimate(PlanConfig((("K80", 4),), transient=False))
+    assert tr.cost_usd < 0.5 * od.cost_usd          # paper: 62.9% savings
+    assert tr.time_h == pytest.approx(od.time_h, rel=0.25)
+
+
+def test_scale_out_beats_scale_up_speed():
+    """Paper §III-C: 4-K80 is ~30% faster than 1 P100 under the budget."""
+    out4 = estimate(PlanConfig((("K80", 4),)))
+    up_p100 = estimate(PlanConfig((("P100", 1),), n_ps=1))
+    assert out4.time_h < up_p100.time_h
+
+
+def test_pareto_front_nondominated():
+    plans = plan_within_budget(5.0, max_workers=8)
+    front = pareto_front(plans)
+    assert front
+    for f in front:
+        assert not any(o.time_h < f.time_h and o.cost_usd <= f.cost_usd
+                       and o.accuracy >= f.accuracy for o in plans)
+
+
+def test_heterogeneous_enumeration():
+    cands = enumerate_candidates(max_workers=3, heterogeneous=True)
+    assert any(len([1 for _, c in p.workers if c]) > 1 for p in cands)
+
+
+# --- proportional shards ------------------------------------------------------
+
+@given(st.integers(1, 8), st.data())
+@settings(max_examples=50, deadline=None)
+def test_proportional_shards_exact_sum(n, data):
+    rates = data.draw(st.lists(
+        st.floats(0.5, 20.0, allow_nan=False), min_size=n, max_size=n))
+    gb = data.draw(st.integers(n, 512))
+    shards = proportional_shards(gb, rates)
+    assert sum(shards) == gb
+    assert all(s >= 1 for s in shards)
+
+
+def test_proportional_shards_balance_barrier():
+    """Speed-proportional shards beat equal shards on barrier time."""
+    rates = [pricing.K80_RATE, pricing.K80_RATE, pricing.V100_RATE,
+             pricing.V100_RATE]
+    gb = 128
+    prop = proportional_shards(gb, rates)
+    equal = [gb // 4] * 4
+    assert barrier_time(prop, rates) < barrier_time(equal, rates)
+    # faster workers get strictly more work
+    assert prop[2] > prop[0]
+
+
+# --- PS capacity / collectives -----------------------------------------------
+
+def test_plan_ps_matches_fig6():
+    assert plan_ps(["K80"] * 4) == 1              # K80: 1 PS suffices
+    assert plan_ps(["V100"] * 8) >= 2             # V100 x8 saturates 1 PS
+
+
+def test_collective_schedule_bytes():
+    pb = 1_000_000
+    ar = collective_schedule(pb, 16, zero1=False)
+    rs = collective_schedule(pb, 16, zero1=True)
+    assert ar.kind == "all_reduce" and not ar.overlappable
+    assert rs.kind == "reduce_scatter_all_gather" and rs.overlappable
+    assert ar.grad_bytes_on_wire == rs.grad_bytes_on_wire  # same total wire
+    assert ar.grad_bytes_on_wire == int(2 * pb * 15 / 16)
+
+
+# --- placement / stragglers ---------------------------------------------------
+
+def test_pick_offers_prefers_local():
+    """Fig 8: cross-region rarely wins on rate/$ after the WAN penalty."""
+    offers = pick_offers(4, ps_region="us-east1", allow_cross_region=True)
+    assert len(offers) == 4
+    assert all(o.region == "us-east1" for o in offers)
+
+
+def test_pick_offers_budget_constrained():
+    offers = pick_offers(4, budget_hr=0.6)
+    assert sum(o.price_hr for o in offers) <= 0.6 + 1e-9
+
+
+def test_drop_stragglers():
+    times = [1.0, 5.0, 1.1, 0.9, 9.0]
+    keep = drop_stragglers(times, k=2)
+    assert keep == [0, 2, 3]
+    assert drop_stragglers(times, k=0) == list(range(5))
+    assert drop_stragglers(times, k=5) == list(range(5))
+
+
+def test_revocation_risk_rank():
+    order = revocation_risk_rank(["K80", "V100", "P100"], horizon_h=1.5)
+    assert order[0] == 1          # V100 is by far the riskiest (Table III)

@@ -1,0 +1,144 @@
+"""Elastic runtime invariants: adaptive LR, masking, restart-equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (OptimizerConfig, ScheduleConfig, TrainConfig,
+                          get_config)
+from repro.core import (CheckpointManager, ElasticRuntime, RevocationEvent,
+                        SparseCluster)
+from repro.core.elastic import make_masked_train_step, slot_batch
+from repro.data.pipeline import ShardedDataset
+from repro.models import layers as L
+from repro.models.builder import build_model
+from repro.train.step import init_state
+
+CFG = get_config("starcoder2-3b", reduced=True)
+TCFG = TrainConfig(
+    optimizer=OptimizerConfig(name="adamw", lr=1e-3, adaptive_lr=True,
+                              base_workers=1),
+    schedule=ScheduleConfig(kind="constant", warmup_steps=1, total_steps=100),
+    checkpoint_every=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = L.unbox(model.init(jax.random.key(0)))
+    state = init_state(model, TCFG, jax.random.key(0), unboxed_params=params)
+    ds = ShardedDataset(CFG, global_batch=8, seq_len=16)
+    return model, state, ds
+
+
+def test_adaptive_lr_tracks_active_count(setup):
+    model, state, ds = setup
+    step = jax.jit(make_masked_train_step(model, TCFG))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    batch, mask = slot_batch(CFG, ds, 0, cluster)
+    _, m1 = step(state, batch, mask)
+    cluster.fill_and_activate(1, 0)
+    cluster.fill_and_activate(2, 0)
+    _, m3 = step(state, batch.copy(), slot_batch(CFG, ds, 0, cluster)[1])
+    assert float(m3["lr"]) == pytest.approx(3 * float(m1["lr"]), rel=1e-5)
+
+
+def test_naive_lr_ignores_active_count(setup):
+    model, state, ds = setup
+    tcfg = TCFG.replace(optimizer=TCFG.optimizer.replace(adaptive_lr=False)) \
+        if hasattr(TCFG, "replace") else None
+    import dataclasses
+    tcfg = dataclasses.replace(
+        TCFG, optimizer=dataclasses.replace(TCFG.optimizer,
+                                            adaptive_lr=False))
+    step = jax.jit(make_masked_train_step(model, tcfg))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    batch, mask = slot_batch(CFG, ds, 0, cluster)
+    _, m = step(state, batch, mask)
+    # naive rule scales by CONFIGURED slots (4), not active (1) — the bug
+    # the paper measures as a 1.17% accuracy loss (Fig 5)
+    expected = 1e-3 * 4
+    assert float(m["lr"]) == pytest.approx(expected, rel=1e-5)
+
+
+def test_inactive_slots_do_not_affect_update(setup):
+    """Poisoning an inactive slot's data must not change the step."""
+    model, state, ds = setup
+    step = jax.jit(make_masked_train_step(model, TCFG))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    cluster.fill_and_activate(1, 0)
+    batch, mask = slot_batch(CFG, ds, 0, cluster)
+    s1, m1 = step(state, batch, mask)
+    poisoned = dict(batch)
+    poisoned["tokens"] = batch["tokens"].at[3].set(0)     # slot 3 inactive
+    poisoned["labels"] = batch["labels"].at[3].set(0)
+    s2, m2 = step(state, poisoned, mask)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-6)
+    same = jax.tree.map(lambda a, b: bool(jnp.allclose(a, b, atol=1e-7)),
+                        s1.params, s2.params)
+    assert all(jax.tree.leaves(same))
+
+
+def test_elastic_run_with_events(setup):
+    model, state, ds = setup
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    rt = ElasticRuntime(model, TCFG, ds, cluster)
+    rt.add_events([
+        RevocationEvent(step=2, slot=1, kind="join"),
+        RevocationEvent(step=4, slot=0, kind="revoke"),
+        RevocationEvent(step=6, slot=2, kind="join"),
+    ])
+    out = rt.run(state, 8)
+    actives = [m["active"] for m in rt.metrics_log]
+    assert actives == [1, 1, 2, 2, 1, 1, 2, 2]
+    assert all(np.isfinite(m["loss"]) for m in rt.metrics_log)
+
+
+def test_no_workers_raises(setup):
+    model, state, ds = setup
+    cluster = SparseCluster(2)
+    cluster.fill_and_activate(0, 0)
+    rt = ElasticRuntime(model, TCFG, ds, cluster)
+    rt.add_events([RevocationEvent(step=1, slot=0, kind="revoke")])
+    with pytest.raises(RuntimeError, match="no active workers"):
+        rt.run(state, 3)
+
+
+def test_restart_equivalence(setup, tmp_path):
+    """Checkpoint + restore replays to an identical final state (C3):
+    the deterministic pipeline + step-in-payload make restarts lossless."""
+    model, _, ds = setup
+    import dataclasses
+    tcfg = dataclasses.replace(TCFG, checkpoint_every=3)
+
+    def fresh():
+        return init_state(model, tcfg, jax.random.key(1))
+
+    # uninterrupted run: 6 steps
+    cluster = SparseCluster(2)
+    cluster.fill_and_activate(0, 0)
+    cluster.fill_and_activate(1, 0)
+    rt = ElasticRuntime(model, tcfg, ds, cluster)
+    ref = rt.run(fresh(), 6)
+
+    # interrupted run: 4 steps (ckpt lands at step 3), "crash", restore
+    ck = CheckpointManager(str(tmp_path))
+    cluster2 = SparseCluster(2)
+    cluster2.fill_and_activate(0, 0)
+    cluster2.fill_and_activate(1, 0)
+    rt2 = ElasticRuntime(model, tcfg, ds, cluster2, ck)
+    rt2.run(fresh(), 4)
+    step, restored, _ = ck.restore_latest()
+    assert step == 3
+    rt3 = ElasticRuntime(model, tcfg, ds, cluster2)
+    final = rt3.run(restored, 3, start_step=3)
+
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        ref.params, final.params)
+    assert max(jax.tree.leaves(diffs)) < 1e-5

@@ -1,0 +1,87 @@
+"""Roofline machinery: HLO collective parsing, wire models, loop trips."""
+import pytest
+
+from repro.roofline import (Collective, RooflineReport, _shape_bytes,
+                            parse_collectives, parse_collectives_loop_aware)
+
+HLO = """\
+HloModule jit_train_step, entry_computation_layout={...}
+
+%region_cond.1 (arg.1: (s32[])) -> pred[] {
+  %iv = s32[] get-tuple-element(%arg.1), index=0
+  %bound = s32[] constant(30)
+  ROOT %lt = pred[] compare(%iv, %bound), direction=LT
+}
+
+%region_body.2 (arg.2: (s32[])) -> (s32[]) {
+  %ar.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag.1 = bf16[2048,128]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %t = (s32[]) tuple(%iv2)
+}
+
+ENTRY %main.3 (p: f32[8]) -> f32[8] {
+  %w = (s32[]) while(%init), condition=%region_cond.1, body=%region_body.2
+  %ar.2 = f32[4096]{0} all-reduce(%z), replica_groups=[1,256]<=[256], to_apply=%add
+  %cp = f32[64,64]{1,0} collective-permute(%q), source_target_pairs={{0,1}}
+  ROOT %r = f32[8] add(%p, %p)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[1024,512]{1,0}") == 1024 * 512 * 4
+    assert _shape_bytes("bf16[2048,128]") == 2048 * 128 * 2
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+
+def test_parse_collectives_flat():
+    colls = parse_collectives(HLO)
+    kinds = sorted(c.kind for c in colls)
+    assert kinds == ["all-gather", "all-reduce", "all-reduce",
+                     "collective-permute"]
+
+
+def test_group_sizes():
+    colls = {(c.kind, c.out_bytes): c for c in parse_collectives(HLO)}
+    ar_big = colls[("all-reduce", 1024 * 512 * 4)]
+    assert ar_big.group == 16                    # iota form [16,16]
+    ag = colls[("all-gather", 2048 * 128 * 2)]
+    assert ag.group == 4                         # explicit {{0,1,2,3}}
+
+
+def test_wire_models():
+    ar = Collective("all-reduce", 1000, 10)
+    assert ar.wire_bytes == pytest.approx(2 * 1000 * 9 / 10)
+    ag = Collective("all-gather", 1000, 10)
+    assert ag.wire_bytes == pytest.approx(1000 * 9 / 10)
+    rs = Collective("reduce-scatter", 100, 10)
+    assert rs.wire_bytes == pytest.approx(100 * 9)
+    cp = Collective("collective-permute", 1000, 2)
+    assert cp.wire_bytes == 1000
+
+
+def test_loop_aware_trip_multiplication():
+    out = parse_collectives_loop_aware(HLO)
+    by_kind = {}
+    for c, trips in out:
+        by_kind.setdefault(c.kind, []).append(trips)
+    assert sorted(by_kind["all-reduce"]) == [1, 30]   # entry + in-loop
+    assert by_kind["all-gather"] == [30]
+    assert by_kind["collective-permute"] == [1]
+
+
+def test_report_terms_and_bottleneck():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=197e12 * 0.1,          # 100 ms of compute
+        hlo_bytes=819e9 * 0.05,          # 50 ms of HBM
+        wire_bytes=50e9 * 0.2,           # 200 ms of ICI
+        model_flops=197e12 * 0.1 * 256 * 0.8,
+        collectives={})
+    assert r.t_compute == pytest.approx(0.1)
+    assert r.t_memory == pytest.approx(0.05)
+    assert r.t_collective == pytest.approx(0.2)
+    assert r.bottleneck == "collective"
+    assert r.useful_flops_ratio == pytest.approx(0.8)
+    # roofline fraction: useful flops per chip over bound time vs peak
+    assert r.roofline_fraction == pytest.approx(0.8 * 0.1 / 0.2)

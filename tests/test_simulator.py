@@ -1,0 +1,155 @@
+"""Event-driven simulator vs. the paper's measured tables (calibration
+validation: the simulator must land inside the paper's mean +- a small
+band, since its constants were fitted to exactly these artifacts)."""
+import numpy as np
+import pytest
+
+from repro.core import pricing
+from repro.core.simulator import (ClusterSpec, WorkerSpec, accuracy_model,
+                                  ps_capped_rate, simulate_many)
+
+
+def test_single_k80_baseline():
+    """Table I: 1 K80 on-demand = 3.91 h, $2.83."""
+    spec = ClusterSpec.homogeneous("K80", 1, transient=False)
+    s = simulate_many(spec, n_runs=4, seed=0)
+    assert s.time_h[0] == pytest.approx(3.91, abs=0.05)
+    assert s.cost[0] == pytest.approx(2.83, abs=0.06)
+
+
+def test_four_k80_transient():
+    """Table I: 4 K80 transient = (1.05 +- .17) h, ($1.05..1.16), ~3.7x."""
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+    s = simulate_many(spec, n_runs=32, seed=1)
+    assert s.time_h[0] == pytest.approx(1.05, abs=0.15)
+    assert s.cost[0] == pytest.approx(1.10, abs=0.15)
+    speedup = 3.91 / s.time_h[0]
+    assert speedup == pytest.approx(3.72, abs=0.5)
+
+
+def test_scaling_out_times():
+    """Table III/IV: r=0 completion times 1.96 / 0.98 / 0.51 h."""
+    for n, expect in ((2, 1.96), (4, 0.98), (8, 0.51)):
+        spec = ClusterSpec.homogeneous("K80", n, transient=True)
+        s = simulate_many(spec, n_runs=32, seed=2)
+        r0 = s.by_r.get(0)
+        assert r0 is not None
+        assert r0["time_h"][0] == pytest.approx(expect, abs=0.12), n
+
+
+def test_scale_up_failure_rates():
+    """Table III: V100 fails ~43.8% of runs; K80 clusters ~3-6%."""
+    v100 = simulate_many(ClusterSpec.homogeneous("V100", 1, transient=True),
+                         n_runs=64, seed=3)
+    assert 0.25 <= v100.failure_rate <= 0.6
+    k80 = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=True),
+                        n_runs=64, seed=4)
+    assert k80.failure_rate <= 0.15
+
+
+def test_scale_up_times():
+    """Table III: 1 P100 = 1.50 h, 1 V100 = 1.23 h (completed runs)."""
+    p = simulate_many(ClusterSpec.homogeneous("P100", 1, transient=True),
+                      n_runs=32, seed=5)
+    v = simulate_many(ClusterSpec.homogeneous("V100", 1, transient=True),
+                      n_runs=64, seed=6)
+    assert p.time_h[0] == pytest.approx(1.50, abs=0.05)
+    assert v.time_h[0] == pytest.approx(1.23, abs=0.05)
+
+
+def test_ondemand_cost_premium():
+    """Table V: on-demand ~2.6-3x the transient cost, same speed."""
+    tr = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=True),
+                       n_runs=32, seed=7)
+    od = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=False),
+                       n_runs=8, seed=8)
+    assert od.failure_rate == 0.0
+    r0_time = tr.by_r[0]["time_h"][0]
+    assert od.time_h[0] == pytest.approx(r0_time, rel=0.05)
+    assert od.cost[0] / tr.cost[0] > 2.0
+
+
+def test_revocation_overhead_shrinks_with_cluster_size():
+    """Table IV: r=1 time overhead 2-K80 >> 8-K80."""
+    overheads = {}
+    for n in (2, 8):
+        spec = ClusterSpec.homogeneous("K80", n, transient=True,
+                                       master_failover=True)
+        s = simulate_many(spec, n_runs=200, seed=9)
+        if 0 in s.by_r and 1 in s.by_r:
+            overheads[n] = (s.by_r[1]["time_h"][0] / s.by_r[0]["time_h"][0]
+                            - 1.0)
+    assert 2 in overheads and 8 in overheads
+    assert overheads[8] < overheads[2]
+    assert overheads[8] < 0.15            # paper: 3.9%
+
+
+def test_master_failover_rescues_jobs():
+    """Our C2 redesign: master-less checkpointing removes the failure mode
+    (1/32 clusters died in the paper when the master was revoked)."""
+    base = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=True),
+                         n_runs=128, seed=10)
+    fixed = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=True,
+                                                  master_failover=True),
+                          n_runs=128, seed=10)
+    master_deaths = sum(1 for r in base.results
+                        if r.failure == "master_revoked")
+    assert master_deaths > 0
+    assert fixed.n_completed > base.n_completed
+    assert all(r.failure != "master_revoked" for r in fixed.results)
+
+
+def test_ps_capacity_saturation():
+    """Fig 6: V100 clusters plateau on one PS; 2 PS ~ up to 1.75x."""
+    r4 = ps_capped_rate(4 * pricing.V100_RATE, 1)
+    r8_1ps = ps_capped_rate(8 * pricing.V100_RATE, 1)
+    r8_2ps = ps_capped_rate(8 * pricing.V100_RATE, 2)
+    assert r8_1ps < 1.25 * r4                 # plateau
+    assert 1.3 < r8_2ps / r8_1ps < 1.9        # second PS pays
+    # K80 clusters are compute-bound: PS count barely matters (Fig 6a)
+    k4_1 = ps_capped_rate(4 * pricing.K80_RATE, 1)
+    k4_2 = ps_capped_rate(4 * pricing.K80_RATE, 2)
+    assert k4_2 / k4_1 < 1.05
+
+
+def test_accuracy_anchors():
+    """Tables I/III anchors pass through the staleness accuracy model."""
+    assert accuracy_model(1) == pytest.approx(93.07, abs=0.01)
+    assert accuracy_model(4) == pytest.approx(91.06, abs=0.01)
+    assert accuracy_model(8) == pytest.approx(88.65, abs=0.01)
+    # monotone decreasing in worker count
+    xs = [accuracy_model(w) for w in (1, 2, 4, 8)]
+    assert xs == sorted(xs, reverse=True)
+    # Fig 5: naive dynamic LR loses ~1.17%; adaptive recovers ~1%
+    naive = accuracy_model(2.5, dynamic=True, adaptive_lr=False)
+    adaptive = accuracy_model(2.5, dynamic=True, adaptive_lr=True)
+    assert adaptive - naive == pytest.approx(1.0, abs=0.01)
+
+
+def test_geo_distributed_slowdown():
+    """Fig 8: cross-region workers slow training up to ~48%; 3 regions no
+    worse than 2."""
+    local = ClusterSpec(tuple(WorkerSpec("K80", True, "us-east1")
+                              for _ in range(4)), n_ps=1)
+    split2 = ClusterSpec((WorkerSpec("K80", True, "us-east1"),
+                          WorkerSpec("K80", True, "us-east1"),
+                          WorkerSpec("K80", True, "us-west1"),
+                          WorkerSpec("K80", True, "us-west1")), n_ps=1)
+    split3 = ClusterSpec((WorkerSpec("K80", True, "us-east1"),
+                          WorkerSpec("K80", True, "us-east1"),
+                          WorkerSpec("K80", True, "us-central1"),
+                          WorkerSpec("K80", True, "us-west1")), n_ps=1)
+    tl = simulate_many(local, 32, seed=11).by_r[0]["time_h"][0]
+    t2 = simulate_many(split2, 32, seed=11).by_r[0]["time_h"][0]
+    t3 = simulate_many(split3, 32, seed=11).by_r[0]["time_h"][0]
+    assert 1.2 < t2 / tl < 1.6
+    assert t3 == pytest.approx(t2, rel=0.12)
+
+
+def test_billing_per_second_vs_hourly():
+    assert pricing.server_cost("K80", 3601, True) == pytest.approx(
+        0.256 * 3601 / 3600)
+    assert pricing.hourly_cost("K80", 3601, True) == pytest.approx(
+        0.256 * 2)
+    with pytest.raises(ValueError):
+        pricing.server_cost("K80", -1, True)

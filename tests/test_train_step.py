@@ -1,0 +1,117 @@
+"""train_step mechanics: learning, microbatching, clipping, schedules."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (OptimizerConfig, ScheduleConfig, TrainConfig,
+                          get_config)
+from repro.data.pipeline import ShardedDataset
+from repro.models import layers as L
+from repro.models.builder import build_model
+from repro.optim import make_schedule
+from repro.optim.schedules import adaptive_lr_scale
+from repro.train.step import init_state, make_train_step
+from repro.train.trainer import Trainer
+
+CFG = get_config("starcoder2-3b", reduced=True)
+TCFG = TrainConfig(
+    optimizer=OptimizerConfig(name="adamw", lr=2e-3),
+    schedule=ScheduleConfig(kind="constant", warmup_steps=1,
+                            total_steps=1000),
+    checkpoint_every=0)
+
+
+def test_loss_decreases():
+    model = build_model(CFG)
+    ds = ShardedDataset(CFG, global_batch=8, seq_len=32)
+    tr = Trainer(model, TCFG, ds)
+    state = tr.init_or_restore()
+    losses = []
+    state = tr.fit(state, 30, on_step=lambda s, m: losses.append(
+        float(m["loss"])))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_microbatch_equivalence():
+    """k=1 vs k=2 accumulation: same update (linear grads, mean loss)."""
+    model = build_model(dataclasses.replace(CFG, dtype="float32"))
+    ds = ShardedDataset(model.cfg, global_batch=8, seq_len=16)
+    batch = ds.global_batch_at(0)
+    t1 = TCFG
+    t2 = dataclasses.replace(TCFG, microbatches=2)
+    s0 = init_state(model, t1, jax.random.key(0))
+    s1, m1 = jax.jit(make_train_step(model, t1))(s0, batch)
+    s2, m2 = jax.jit(make_train_step(model, t2))(s0, batch)
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         s1.params, s2.params)
+    assert max(jax.tree.leaves(diffs)) < 5e-5
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-4)
+
+
+def test_grad_clip_bounds_update():
+    model = build_model(CFG)
+    ds = ShardedDataset(CFG, global_batch=4, seq_len=16)
+    tc = dataclasses.replace(
+        TCFG, optimizer=dataclasses.replace(TCFG.optimizer, grad_clip=0.01))
+    state = init_state(model, tc, jax.random.key(0))
+    _, m = jax.jit(make_train_step(model, tc))(state, ds.global_batch_at(0))
+    assert float(m["grad_norm"]) > 0
+
+
+def test_lr_scale_runtime_scalar_no_recompile():
+    model = build_model(CFG)
+    ds = ShardedDataset(CFG, global_batch=4, seq_len=16)
+    step = jax.jit(make_train_step(model, TCFG))
+    state = init_state(model, TCFG, jax.random.key(0))
+    batch = ds.global_batch_at(0)
+    _, m1 = step(state, batch, jnp.float32(1.0))
+    _, m2 = step(state, batch, jnp.float32(4.0))
+    assert float(m2["lr"]) == pytest.approx(4 * float(m1["lr"]), rel=1e-5)
+    assert step._cache_size() == 1              # same trace served both
+
+
+def test_schedules():
+    cos = make_schedule(ScheduleConfig(kind="cosine", warmup_steps=10,
+                                       total_steps=100, min_ratio=0.1))
+    assert float(cos(0)) == pytest.approx(0.1, abs=0.02)      # warmup ramp
+    assert float(cos(10)) == pytest.approx(1.0, abs=0.02)
+    assert float(cos(100)) == pytest.approx(0.1, abs=0.02)    # floor
+    step = make_schedule(ScheduleConfig(kind="step", warmup_steps=1,
+                                        total_steps=64000,
+                                        step_boundaries=(32000, 48000),
+                                        step_factors=(0.1, 0.01)))
+    assert float(step(31999)) == pytest.approx(1.0)
+    assert float(step(32000)) == pytest.approx(0.1)
+    assert float(step(48000)) == pytest.approx(0.01)
+
+
+def test_adaptive_lr_scale_rule():
+    assert float(adaptive_lr_scale(3, base_workers=1)) == 3.0
+    assert float(adaptive_lr_scale(3, base_workers=1, adaptive=False,
+                                   configured_workers=8)) == 8.0
+
+
+def test_trainer_restart_equivalence(tmp_path):
+    from repro.core.checkpoint import CheckpointManager
+    model = build_model(CFG)
+    ds = ShardedDataset(CFG, global_batch=4, seq_len=16)
+    tc = dataclasses.replace(TCFG, checkpoint_every=3)
+
+    tr_ref = Trainer(model, tc, ds)
+    ref = tr_ref.fit(tr_ref.init_or_restore(jax.random.key(7)), 6)
+
+    ck = CheckpointManager(str(tmp_path))
+    tr_a = Trainer(model, tc, ds, ck)
+    tr_a.fit(tr_a.init_or_restore(jax.random.key(7)), 4)   # ckpt at step 3
+    tr_b = Trainer(model, tc, ds, ck)
+    state = tr_b.init_or_restore()                          # restores step 3
+    assert int(state.step) == 3
+    final = tr_b.fit(state, 3)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        ref.params, final.params)
+    assert max(jax.tree.leaves(diffs)) < 1e-5
