@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import math
 import os
 import sys
 import time
@@ -40,3 +41,13 @@ def emit(name: str, rows: List[Dict], notes: str = "") -> Dict:
 
 def tup(mean: float, std: float, nd: int = 2) -> str:
     return f"({mean:.{nd}f}, {std:.{nd}f})"
+
+
+def mci(mean: float, std: float, n: int, nd: int = 2) -> str:
+    """``mean±ci95 (σstd)`` — how every Monte-Carlo column reports now that
+    the batched engine makes >=1024 trials the default (σ is what the paper
+    tabulates over its 32 clusters, the CI is ours on the mean)."""
+    if n <= 1:
+        return f"{mean:.{nd}f}"
+    hw = 1.96 * std / math.sqrt(n)
+    return f"{mean:.{nd}f}±{hw:.{nd}f} (σ{std:.{nd}f})"

@@ -11,7 +11,7 @@ from repro.core.simulator import ClusterSpec, simulate_many
 def run() -> dict:
     rows = []
     base = simulate_many(ClusterSpec.homogeneous("K80", 1, transient=True),
-                         n_runs=16, seed=80)
+                         n_runs=1024, seed=80)
     for kind in ("K80", "V100"):
         for n in (1, 2, 4, 8):
             for n_ps in (1, 2):
@@ -21,7 +21,7 @@ def run() -> dict:
                                                master_failover=True)
                 spec = ClusterSpec(workers=spec.workers, n_ps=n_ps,
                                    master_failover=True)
-                s = simulate_many(spec, n_runs=32, seed=81)
+                s = simulate_many(spec, n_runs=1024, seed=81)
                 if s.n_completed == 0:
                     continue
                 r0 = s.by_r.get(0, {"time_h": s.time_h, "cost": s.cost})

@@ -12,7 +12,7 @@ import sys
 import time
 
 from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
-                        fig8_geo_distributed, roofline_report,
+                        fig8_geo_distributed, frontier, roofline_report,
                         selective_revocation, staleness_accuracy,
                         table1_transient_vs_ondemand,
                         table3_scale_up_vs_out, table4_revocation_overhead,
@@ -26,6 +26,7 @@ MODULES = {
     "fig5": fig5_dynamic_cluster,
     "fig6": fig6_ps_bottleneck,
     "fig8": fig8_geo_distributed,
+    "frontier": frontier,
     "staleness": staleness_accuracy,
     "selective": selective_revocation,
     "roofline": roofline_report,

@@ -9,7 +9,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.cost import pareto_front, plan_within_budget
+from repro.core.cost import mc_validate, pareto_front, plan_within_budget
 from repro.core.scheduler import pick_offers, plan_ps, proportional_shards
 
 
@@ -19,6 +19,9 @@ def main():
                     help="USD (paper: one on-demand K80 run)")
     ap.add_argument("--max-failure-p", type=float, default=0.10)
     ap.add_argument("--min-accuracy", type=float, default=90.0)
+    ap.add_argument("--mc", action="store_true",
+                    help="cross-check the chosen plan against 1024 batched "
+                         "Monte-Carlo trials (core/mc.py)")
     args = ap.parse_args()
 
     plans = plan_within_budget(args.budget, max_workers=12,
@@ -44,6 +47,15 @@ def main():
     rates = [pricing.SERVER_TYPES[k].steps_per_sec for k in kinds]
     print(f"  proportional shards of a 256-row global batch: "
           f"{proportional_shards(256, rates)}")
+
+    if args.mc:
+        s = mc_validate(best.config, n_trials=1024, seed=0)
+        print(f"\nMC cross-check (1024 trials): "
+              f"time {s.time_h[0]:.2f}±{s.ci95('time_h'):.2f} h "
+              f"(analytic {best.time_h:.2f}), "
+              f"cost ${s.cost[0]:.2f}±{s.ci95('cost'):.2f} "
+              f"(analytic ${best.cost_usd:.2f}), "
+              f"fail_p {s.failure_rate:.3f} (analytic {best.failure_p:.2f})")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,10 @@ elastic     masked + remesh elastic execution, adaptive LR (C5/C6)
 staleness   AsyncPSSimulator: exact async-PS semantics in JAX (C4)
 checkpoint  master-less replicated checkpointing + fast-save (C2)
 cost        analytic cost model + budget planner (C1, §III-C)
-scheduler   heterogeneous shards, PS-capacity/collective map, offers (C7/C8)
+scheduler   heterogeneous shards, PS-capacity/collective map, offers,
+            MC provisioning optimizer (C7/C8)
 simulator   event-driven Monte-Carlo of full training runs (Tables I-V)
+mc          batched (vectorized trial-axis) Monte-Carlo engine
 """
 from repro.core.cluster import SparseCluster, SlotState  # noqa: F401
 from repro.core.checkpoint import CheckpointManager  # noqa: F401
@@ -19,3 +21,7 @@ from repro.core.elastic import (ElasticRuntime, RevocationEvent,  # noqa: F401
 from repro.core.staleness import AsyncPSSimulator, AsyncWorker  # noqa: F401
 from repro.core.simulator import (ClusterSpec, WorkerSpec,  # noqa: F401
                                   simulate_many, simulate_run)
+from repro.core.mc import MCBatch, simulate_batch  # noqa: F401
+from repro.core.scheduler import (MCPlanEstimate,  # noqa: F401
+                                  optimize_provisioning,
+                                  sweep_configurations)

@@ -175,16 +175,48 @@ def plan_within_budget(budget_usd: float = pricing.SINGLE_K80_BUDGET,
     return sorted(out, key=lambda e: e.time_h)
 
 
-def pareto_front(estimates: Sequence[PlanEstimate]) -> List[PlanEstimate]:
-    """Non-dominated set over (time, cost, -accuracy)."""
-    front: List[PlanEstimate] = []
-    for e in estimates:
-        dominated = any(
-            o.time_h <= e.time_h and o.cost_usd <= e.cost_usd
-            and o.accuracy >= e.accuracy and
-            (o.time_h < e.time_h or o.cost_usd < e.cost_usd
-             or o.accuracy > e.accuracy)
-            for o in estimates)
-        if not dominated:
-            front.append(e)
+def dominates(a, b) -> bool:
+    """Pareto dominance over (time, cost, -accuracy): ``a`` is no worse on
+    every axis and strictly better on at least one.  Works on anything with
+    ``time_h`` / ``cost_usd`` / ``accuracy`` attributes (the analytic
+    ``PlanEstimate`` and the scheduler's Monte-Carlo ``MCPlanEstimate``)."""
+    return (a.time_h <= b.time_h and a.cost_usd <= b.cost_usd
+            and a.accuracy >= b.accuracy
+            and (a.time_h < b.time_h or a.cost_usd < b.cost_usd
+                 or a.accuracy > b.accuracy))
+
+
+def pareto_front(estimates: Sequence) -> List:
+    """Non-dominated set over (time, cost, -accuracy), fastest-first."""
+    front = [e for e in estimates
+             if not any(dominates(o, e) for o in estimates)]
     return sorted(front, key=lambda e: e.time_h)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo cross-validation of the analytic expectations
+# ---------------------------------------------------------------------------
+
+def plan_to_spec(cfg: PlanConfig, total_steps: int = DEFAULT_STEPS,
+                 *, master_failover: bool = False):
+    """Bridge a planner candidate to a simulator ``ClusterSpec``."""
+    from repro.core.simulator import ClusterSpec, WorkerSpec
+    workers = tuple(WorkerSpec(kind, cfg.transient)
+                    for kind, count in cfg.workers for _ in range(count))
+    n_ps = cfg.n_ps if len(workers) > 1 else 0
+    return ClusterSpec(workers=workers, n_ps=n_ps, total_steps=total_steps,
+                       master_failover=master_failover)
+
+
+def mc_validate(cfg: PlanConfig, total_steps: int = DEFAULT_STEPS,
+                n_trials: int = 1024, seed: int = 0):
+    """Run the batched Monte-Carlo engine on a planner candidate.
+
+    Returns a ``simulator.Summary`` whose means the closed-form
+    ``estimate(cfg)`` should bracket — the cheap analytic model steers the
+    search, the MC distributions arbitrate (tests/test_cost_scheduler.py
+    and tests/test_mc_engine.py pin this agreement).
+    """
+    from repro.core.simulator import simulate_many
+    return simulate_many(plan_to_spec(cfg, total_steps), n_runs=n_trials,
+                         seed=seed, engine="batched")

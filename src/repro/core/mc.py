@@ -1,0 +1,359 @@
+"""Batched Monte-Carlo simulation engine — the trial axis as an array axis.
+
+The legacy path (``simulator.simulate_run``) replays ONE training run with a
+per-event Python loop; ``simulate_many`` used to call it N times.  That is
+fine for the paper's 32-cluster tables but far too slow to sweep cluster
+configurations or to report tight confidence intervals (>=1024 trials).
+
+This module re-expresses the same event-driven semantics as a *synchronized*
+event loop over a batch of N independent trials: every iteration advances
+each still-running trial to its own next event, but all the bookkeeping
+(piecewise-constant rate integration, revocation masks, join scheduling,
+per-second billing) is NumPy array arithmetic of shape ``(N,)`` / ``(N, W)``.
+The iteration count is bounded by the per-trial event count (a handful:
+W revocations + 2 events per dynamic join + completion), so 1024 trials cost
+a few dozen vectorized passes instead of 1024 Python event loops — two
+orders of magnitude faster in practice.
+
+Semantics are identical to the legacy loop (cross-validated on fixed seeds
+in ``tests/test_mc_engine.py``); only the RNG *consumption order* differs,
+so individual trials are not bitwise-reproducible across engines — means,
+failure rates, and distributions agree within Monte-Carlo noise.
+
+The arithmetic is plain ``numpy`` on purpose: every per-iteration update is
+elementwise or a masked reduction over the trial axis, i.e. directly
+``jax.vmap``/``jax.jit``-able if a future PR wants to push sweeps onto an
+accelerator (swap ``np`` for ``jnp`` and carry the state arrays through
+``lax.while_loop``).  On CPU, NumPy already beats the Python loop by far
+more than the sweeps need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import pricing
+from repro.core.simulator import (ACC_ANCHORS, JOIN_OVERHEAD_S,
+                                  PS_CONTENTION_K, PS_RATE_STEPS_S,
+                                  ClusterSpec, RunResult, _worker_rate)
+from repro.core.transient import LIFETIMES, MAX_LIFETIME_S
+
+# Trial status codes (mirrors simulate_run's ``failure`` strings).
+RUNNING = 0
+COMPLETED = 1
+MASTER_REVOKED = 2
+PS_REVOKED = 3
+ALL_REVOKED = 4
+NO_PROGRESS = 5
+
+FAILURE_NAMES = {COMPLETED: None, MASTER_REVOKED: "master_revoked",
+                 PS_REVOKED: "ps_revoked", ALL_REVOKED: "all_revoked",
+                 NO_PROGRESS: "no_progress"}
+
+# Event codes for the per-iteration argmin (order matches the legacy event
+# list so simultaneous events tie-break identically: revoke < ps_revoke <
+# join_active < join_request < done).
+_EV_REVOKE, _EV_PS, _EV_JOIN_ACT, _EV_JOIN_REQ, _EV_DONE = range(5)
+
+_MAX_EVENTS = 10_000            # same no-progress guard as the legacy loop
+
+
+def ps_capped_rate_batch(sum_rate: np.ndarray, n_ps: int) -> np.ndarray:
+    """Vectorized ``simulator.ps_capped_rate`` over a trial axis (Fig 6)."""
+    s = np.asarray(sum_rate, dtype=np.float64)
+    if n_ps == 0:
+        return np.maximum(s, 0.0)
+    cap = n_ps * PS_RATE_STEPS_S
+    with np.errstate(invalid="ignore"):
+        capped = s / (1.0 + (s / cap) ** PS_CONTENTION_K) ** (1.0 / PS_CONTENTION_K)
+    return np.where(s > 0, capped, 0.0)
+
+
+def accuracy_model_batch(avg_workers: np.ndarray, *, dynamic: bool = False,
+                         adaptive_lr: bool = True) -> np.ndarray:
+    """Vectorized ``simulator.accuracy_model``: piecewise-linear in log2(W)
+    through the paper's anchors, linear extrapolation past the last one."""
+    w = np.maximum(1.0, np.asarray(avg_workers, dtype=np.float64))
+    lx = np.log2(w)
+    xs = np.array([math.log2(k) for k in sorted(ACC_ANCHORS)])
+    ys = np.array([v for _, v in sorted(ACC_ANCHORS.items())])
+    acc = np.interp(lx, xs, ys)           # clamps flat on both ends
+    slope = (ys[-1] - ys[-2]) / (xs[-1] - xs[-2])
+    acc = np.where(lx > xs[-1], ys[-1] + slope * (lx - xs[-1]), acc)
+    if dynamic:
+        acc = acc - (1.17 if not adaptive_lr else 0.17)
+    return acc
+
+
+@dataclasses.dataclass
+class MCBatch:
+    """Raw per-trial outcome arrays for N Monte-Carlo trials of one spec.
+
+    Shape/dtype invariants (asserted in tests): every per-trial array has
+    shape ``(n_trials,)``; per-slot arrays are ``(n_trials, n_workers)``;
+    floats are float64, counters int64, masks bool.
+    """
+    spec: ClusterSpec
+    status: np.ndarray            # (N,) int64, COMPLETED/..-codes
+    time_h: np.ndarray            # (N,) float64  (failure time for failures)
+    cost_usd: np.ndarray          # (N,) float64
+    accuracy: np.ndarray          # (N,) float64, NaN for failed trials
+    revocations: np.ndarray       # (N,) int64, non-fatal worker revocations
+    steps_done: np.ndarray        # (N,) float64
+    avg_active_workers: np.ndarray  # (N,) float64
+    lifetimes_h: np.ndarray       # (N, W) float64, NaN = never provisioned
+
+    @property
+    def n_trials(self) -> int:
+        return int(self.status.shape[0])
+
+    @property
+    def completed(self) -> np.ndarray:
+        return self.status == COMPLETED
+
+    def to_results(self) -> List[RunResult]:
+        """Materialize legacy ``RunResult`` objects (compat path).
+
+        Converts through ``.tolist()`` once per column — per-element numpy
+        scalar indexing would dominate the whole engine's runtime.
+        """
+        cols = zip(self.status.tolist(), self.time_h.tolist(),
+                   self.cost_usd.tolist(), self.accuracy.tolist(),
+                   self.revocations.tolist(), self.steps_done.tolist(),
+                   self.avg_active_workers.tolist(),
+                   self.lifetimes_h.tolist())
+        return [RunResult(completed=st == COMPLETED,
+                          failure=FAILURE_NAMES[st], time_h=th,
+                          cost_usd=c, accuracy=a, revocations=rv,
+                          steps_done=int(sd), avg_active_workers=aw,
+                          worker_lifetimes_h=[x for x in lt if x == x])
+                for st, th, c, a, rv, sd, aw, lt in cols]
+
+
+def _sample_lifetimes(kind: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    return LIFETIMES[kind].sample(rng, n)
+
+
+def _masked_mean_std(x: np.ndarray, m: np.ndarray) -> Tuple[float, float]:
+    sel = x[m]
+    if sel.size == 0:
+        return (float("nan"), float("nan"))
+    return (float(sel.mean()), float(sel.std()))
+
+
+class _LazyResults:
+    """List-like view of a batch's ``RunResult``s, materialized on first
+    access — building 1024 Python objects costs more than the batched
+    simulation itself, and sweep consumers never touch ``Summary.results``."""
+
+    def __init__(self, batch: "MCBatch"):
+        self._batch = batch
+        self._items: Optional[List[RunResult]] = None
+
+    def _force(self) -> List[RunResult]:
+        if self._items is None:
+            self._items = self._batch.to_results()
+        return self._items
+
+    def __iter__(self):
+        return iter(self._force())
+
+    def __len__(self) -> int:
+        return self._batch.n_trials
+
+    def __getitem__(self, i):
+        return self._force()[i]
+
+    def __repr__(self) -> str:
+        return repr(self._force())
+
+
+def summarize_batch(batch: MCBatch):
+    """Vectorized counterpart of ``simulator.summarize`` — same ``Summary``
+    values, computed on the trial-axis arrays instead of per-run objects."""
+    from repro.core.simulator import Summary   # late: simulator imports mc
+    done = batch.completed
+    n_done = int(done.sum())
+    rs, counts = np.unique(batch.revocations[done], return_counts=True)
+    rev_counts = {int(r): int(c) for r, c in zip(rs, counts)}
+    by_r = {}
+    for r in rev_counts:
+        sel = done & (batch.revocations == r)
+        by_r[r] = {"time_h": _masked_mean_std(batch.time_h, sel),
+                   "cost": _masked_mean_std(batch.cost_usd, sel),
+                   "acc": _masked_mean_std(batch.accuracy, sel)}
+    return Summary(
+        n_runs=batch.n_trials,
+        n_completed=n_done,
+        failure_rate=1.0 - n_done / batch.n_trials,
+        revocation_counts=rev_counts,
+        time_h=_masked_mean_std(batch.time_h, done),
+        cost=_masked_mean_std(batch.cost_usd, done),
+        acc=_masked_mean_std(batch.accuracy, done),
+        by_r=by_r,
+        results=_LazyResults(batch),
+    )
+
+
+def simulate_batch(spec: ClusterSpec, n_trials: int,
+                   rng: np.random.Generator) -> MCBatch:
+    """Run ``n_trials`` independent Monte-Carlo trials of ``spec``, batched.
+
+    Equivalent to ``[simulate_run(spec, rng) for _ in range(n_trials)]`` up
+    to RNG consumption order; see the module docstring.
+    """
+    if n_trials <= 0:
+        raise ValueError(f"n_trials must be positive, got {n_trials}")
+    N, W = n_trials, len(spec.workers)
+    if W == 0:
+        raise ValueError("spec has no workers")
+
+    # --- static per-slot attributes ------------------------------------
+    rate_w = np.array([_worker_rate(w, spec.ps_region) for w in spec.workers])
+    price_s = np.array([pricing.SERVER_TYPES[w.kind].price_hr(w.transient)
+                        for w in spec.workers]) / 3600.0
+    transient_w = np.array([w.transient for w in spec.workers], dtype=bool)
+    join_step_w = np.array([w.join_step for w in spec.workers], dtype=np.float64)
+    initial_w = join_step_w == 0
+
+    # --- per-(trial, slot) state ---------------------------------------
+    active = np.zeros((N, W), dtype=bool)
+    joined = np.zeros((N, W), dtype=bool)
+    provisioned = np.zeros((N, W), dtype=bool)
+    start_t = np.full((N, W), np.nan)
+    revoke_t = np.full((N, W), np.inf)     # absolute; inf = never revokes
+    pending_t = np.full((N, W), np.inf)    # join activation time; inf = none
+
+    for j in range(W):
+        if initial_w[j]:
+            active[:, j] = True
+            joined[:, j] = True
+            provisioned[:, j] = True
+            start_t[:, j] = 0.0
+            if transient_w[j]:
+                revoke_t[:, j] = _sample_lifetimes(spec.workers[j].kind, N, rng)
+
+    # Parameter servers: the run dies at the FIRST PS revocation, so only
+    # min-over-PS matters; each PS bills to the trial's end either way.
+    if spec.n_ps > 0 and spec.ps_transient:
+        ps_revoke = _sample_lifetimes("PS", N * spec.n_ps, rng) \
+            .reshape(N, spec.n_ps).min(axis=1)
+    else:
+        ps_revoke = np.full(N, np.inf)
+
+    # --- per-trial state -----------------------------------------------
+    t = np.zeros(N)
+    steps = np.zeros(N)
+    worker_int = np.zeros(N)               # ∫ active_workers dt
+    revocations = np.zeros(N, dtype=np.int64)
+    status = np.full(N, RUNNING, dtype=np.int64)
+    total = float(spec.total_steps)
+
+    # --- synchronized event loop over the batch ------------------------
+    for _ in range(_MAX_EVENTS):
+        m = status == RUNNING
+        if not m.any():
+            break
+        rate = ps_capped_rate_batch((active * rate_w).sum(axis=1), spec.n_ps)
+        n_active = active.sum(axis=1).astype(np.float64)
+        has_rate = rate > 0
+
+        # candidate event times, all (N,)
+        rv = np.where(active & transient_w, revoke_t, np.inf)
+        t_rev = rv.min(axis=1)
+        rev_slot = rv.argmin(axis=1)
+
+        t_jact = pending_t.min(axis=1)
+        jact_slot = pending_t.argmin(axis=1)
+
+        with np.errstate(invalid="ignore", divide="ignore"):
+            eligible = (~joined) & (join_step_w > 0) \
+                & (steps[:, None] < join_step_w) & has_rate[:, None]
+            cross = t[:, None] + (join_step_w - steps[:, None]) / rate[:, None]
+            cross = np.where(eligible, cross, np.inf)
+            t_jreq = cross.min(axis=1)
+            jreq_slot = cross.argmin(axis=1)
+            t_done = np.where(has_rate, t + (total - steps) / rate, np.inf)
+
+        # stalled: no compute AND nothing pending -> all_revoked (legacy)
+        dead = m & ~has_rate & np.isinf(t_jact)
+        status[dead] = ALL_REVOKED
+        m = m & ~dead
+
+        ev_t = np.stack([t_rev, ps_revoke, t_jact, t_jreq, t_done])
+        ev = ev_t.argmin(axis=0)           # ties resolve in legacy order
+        t_next = ev_t.min(axis=0)
+
+        # integrate the piecewise-constant rate up to each trial's event
+        dt = np.where(m, np.maximum(0.0, t_next - t), 0.0)
+        finite = np.isfinite(dt)
+        steps += np.where(finite, rate * dt, 0.0)
+        worker_int += np.where(finite, n_active * dt, 0.0)
+        t = np.where(m & finite, t_next, t)
+
+        # --- apply events, masked per type -----------------------------
+        done = m & (ev == _EV_DONE)
+        steps[done] = total
+        status[done] = COMPLETED
+
+        psk = m & (ev == _EV_PS)
+        status[psk] = PS_REVOKED
+
+        rev = m & (ev == _EV_REVOKE)
+        if rev.any():
+            idx = np.nonzero(rev)[0]
+            slots = rev_slot[idx]
+            active[idx, slots] = False
+            # processed revocations never fire twice: the slot leaves the
+            # active set, and billing reads revoke_t directly.
+            fatal = (slots == 0) & (not spec.master_failover)
+            status[idx[fatal]] = MASTER_REVOKED
+            revocations[idx[~fatal]] += 1
+
+        jrq = m & (ev == _EV_JOIN_REQ)
+        if jrq.any():
+            idx = np.nonzero(jrq)[0]
+            slots = jreq_slot[idx]
+            joined[idx, slots] = True
+            pending_t[idx, slots] = t[idx] + JOIN_OVERHEAD_S
+
+        jac = m & (ev == _EV_JOIN_ACT)
+        if jac.any():
+            idx = np.nonzero(jac)[0]
+            slots = jact_slot[idx]
+            pending_t[idx, slots] = np.inf
+            provisioned[idx, slots] = True
+            active[idx, slots] = True
+            start_t[idx, slots] = t[idx]
+            # fresh lifetime sampled at activation, grouped per slot so the
+            # draw stays one vectorized call per server kind
+            for s in np.unique(slots):
+                sel = idx[slots == s]
+                if transient_w[s]:
+                    revoke_t[sel, s] = t[sel] + _sample_lifetimes(
+                        spec.workers[s].kind, len(sel), rng)
+    status[status == RUNNING] = NO_PROGRESS
+
+    # --- billing: per-second, each server to min(revocation, run end) ---
+    t_end = t[:, None]
+    bill_end = np.minimum(revoke_t, t_end)     # inf (never revoked) -> t_end
+    with np.errstate(invalid="ignore"):        # NaN start = never provisioned
+        secs = np.where(provisioned, np.maximum(0.0, bill_end - start_t), 0.0)
+    cost = (secs * price_s).sum(axis=1)
+    cost += spec.n_ps * pricing.SERVER_TYPES["PS"].price_hr(
+        spec.ps_transient) * t / 3600.0
+
+    avg_w = np.divide(worker_int, t, out=np.zeros(N), where=t > 0)
+    dynamic = bool((join_step_w > 0).any())
+    acc = accuracy_model_batch(avg_w, dynamic=dynamic,
+                               adaptive_lr=spec.adaptive_lr)
+    acc = np.where(status == COMPLETED, acc, np.nan)
+
+    lifetimes_h = np.where(provisioned, secs / 3600.0, np.nan)
+    return MCBatch(spec=spec, status=status, time_h=t / 3600.0,
+                   cost_usd=cost, accuracy=acc, revocations=revocations,
+                   steps_done=np.where(status == COMPLETED, total, steps),
+                   avg_active_workers=avg_w, lifetimes_h=lifetimes_h)

@@ -209,6 +209,159 @@ def revocation_risk_rank(kinds: Sequence[str], horizon_h: float) -> List[int]:
 # accuracy to lose. Validated in benchmarks/selective_revocation.py with
 # real async-PS training.
 
+# ---------------------------------------------------------------------------
+# 5. Monte-Carlo provisioning optimizer (sweeps over the MC distributions)
+# ---------------------------------------------------------------------------
+# The analytic planner (core/cost.py) scores candidates with closed-form
+# expectations; this optimizer re-scores them against the full revocation
+# DISTRIBUTIONS via the batched engine (core/mc.py), so 1024 trials per
+# configuration is the default rather than a luxury.  It sweeps server
+# type x count x PS count x placement (single/cross-region) x static vs
+# dynamic (sparse-mapping ramp) x transient vs on-demand, and reports the
+# cost/time/accuracy Pareto frontier with 95% CIs.
+
+def _dynamic_ramp_spec(kind: str, n: int, total_steps: int,
+                       master_failover: bool) -> "ClusterSpec":
+    """Fig-5-style ramp: start with 1 worker, add one every total/n steps."""
+    from repro.core.simulator import ClusterSpec, WorkerSpec
+    workers = tuple(WorkerSpec(kind, True, join_step=i * total_steps // n)
+                    for i in range(n))
+    return ClusterSpec(workers=workers, n_ps=1, total_steps=total_steps,
+                       master_failover=master_failover)
+
+
+def _cross_region_spec(kind: str, n: int, total_steps: int,
+                       master_failover: bool) -> "ClusterSpec":
+    """Fig-8-style split: half the workers in a remote region."""
+    from repro.core.simulator import ClusterSpec, WorkerSpec
+    regions = ["us-east1"] * (n - n // 2) + ["us-west1"] * (n // 2)
+    workers = tuple(WorkerSpec(kind, True, region=r) for r in regions)
+    return ClusterSpec(workers=workers, n_ps=1, ps_region="us-east1",
+                       total_steps=total_steps,
+                       master_failover=master_failover)
+
+
+def sweep_configurations(*, kinds: Sequence[str] = ("K80", "P100", "V100"),
+                         counts: Sequence[int] = (1, 2, 4, 8),
+                         ps_counts: Sequence[int] = (1, 2),
+                         include_ondemand: bool = True,
+                         include_dynamic: bool = True,
+                         include_cross_region: bool = True,
+                         master_failover: bool = True,
+                         total_steps: int = 64_000) -> List[Tuple[str, "ClusterSpec"]]:
+    """Enumerate labelled candidate ``ClusterSpec``s for the optimizer."""
+    from repro.core.simulator import ClusterSpec
+    points: List[Tuple[str, ClusterSpec]] = []
+    for kind in kinds:
+        for n in counts:
+            base = ClusterSpec.homogeneous(kind, n, transient=True,
+                                           total_steps=total_steps,
+                                           master_failover=master_failover)
+            for n_ps in ps_counts:
+                if n == 1 and n_ps != 1:
+                    continue
+                if n == 1:
+                    points.append((f"1x{kind}", base))
+                    continue
+                spec = dataclasses.replace(base, n_ps=n_ps)
+                points.append((f"{n}x{kind}+{n_ps}PS", spec))
+            if include_ondemand:
+                od = ClusterSpec.homogeneous(kind, n, transient=False,
+                                             total_steps=total_steps)
+                points.append((f"{n}x{kind} on-demand", od))
+            if include_dynamic and n > 1:
+                points.append((f"{n}x{kind} dynamic",
+                               _dynamic_ramp_spec(kind, n, total_steps,
+                                                  master_failover)))
+            if include_cross_region and n > 1:
+                points.append((f"{n}x{kind} 2-region",
+                               _cross_region_spec(kind, n, total_steps,
+                                                  master_failover)))
+    return points
+
+
+@dataclasses.dataclass(frozen=True)
+class MCPlanEstimate:
+    """Monte-Carlo estimate of one provisioning candidate, with 95% CIs.
+
+    ``time_h``/``cost_usd``/``accuracy`` are means over completed trials so
+    the object plugs directly into ``cost.pareto_front``/``cost.dominates``.
+    """
+    label: str
+    spec: "ClusterSpec"
+    n_trials: int
+    time_h: float
+    time_ci95: float
+    cost_usd: float
+    cost_ci95: float
+    accuracy: float
+    acc_ci95: float
+    failure_p: float
+    speedup_vs_1k80: float
+
+    def describe(self) -> str:
+        return (f"{self.label}: {self.time_h:.2f}±{self.time_ci95:.2f} h, "
+                f"${self.cost_usd:.2f}±{self.cost_ci95:.2f}, "
+                f"{self.accuracy:.2f}±{self.acc_ci95:.2f}%, "
+                f"fail_p={self.failure_p:.3f}")
+
+
+def evaluate_configurations(points: Sequence[Tuple[str, "ClusterSpec"]],
+                            *, n_trials: int = 1024,
+                            seed: int = 0) -> List[MCPlanEstimate]:
+    """Score each candidate over ``n_trials`` batched Monte-Carlo trials."""
+    from repro.core.simulator import simulate_many
+    out: List[MCPlanEstimate] = []
+    for i, (label, spec) in enumerate(points):
+        s = simulate_many(spec, n_runs=n_trials, seed=seed + i,
+                          engine="batched")
+        if s.n_completed == 0:
+            continue
+        # baseline = 1 on-demand K80 on the SAME workload length
+        t_base_h = (spec.total_steps
+                    / pricing.SERVER_TYPES["K80"].steps_per_sec / 3600.0)
+        out.append(MCPlanEstimate(
+            label=label, spec=spec, n_trials=n_trials,
+            time_h=s.time_h[0], time_ci95=s.ci95("time_h"),
+            cost_usd=s.cost[0], cost_ci95=s.ci95("cost"),
+            accuracy=s.acc[0], acc_ci95=s.ci95("acc"),
+            failure_p=s.failure_rate,
+            speedup_vs_1k80=t_base_h / s.time_h[0]))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ProvisioningReport:
+    estimates: Tuple[MCPlanEstimate, ...]     # every evaluated candidate
+    frontier: Tuple[MCPlanEstimate, ...]      # (time, cost, -acc) Pareto set
+    best: Optional[MCPlanEstimate]            # fastest feasible, or None
+
+
+def optimize_provisioning(*, budget_usd: Optional[float] = None,
+                          max_failure_p: float = 1.0,
+                          min_accuracy: float = 0.0,
+                          n_trials: int = 1024, seed: int = 0,
+                          **sweep_kwargs) -> ProvisioningReport:
+    """Sweep cluster configurations over the MC distributions (the paper's
+    §III-C question, answered with distributions instead of expectations).
+
+    Returns every scored candidate, the cost/time/accuracy Pareto frontier,
+    and the fastest candidate satisfying the budget / failure / accuracy
+    constraints (``best is None`` when nothing qualifies).
+    """
+    from repro.core import cost as cost_mod
+    ests = evaluate_configurations(sweep_configurations(**sweep_kwargs),
+                                   n_trials=n_trials, seed=seed)
+    frontier = tuple(cost_mod.pareto_front(ests))
+    feasible = [e for e in ests
+                if (budget_usd is None or e.cost_usd <= budget_usd + 1e-9)
+                and e.failure_p <= max_failure_p
+                and e.accuracy >= min_accuracy]
+    best = min(feasible, key=lambda e: e.time_h) if feasible else None
+    return ProvisioningReport(estimates=tuple(ests), frontier=frontier,
+                              best=best)
+
+
 def choose_victims(staleness_by_worker, n: int,
                    rates: Optional[Dict[int, float]] = None) -> List[int]:
     """Pick ``n`` workers to voluntarily return.

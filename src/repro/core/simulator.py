@@ -268,7 +268,8 @@ def simulate_run(spec: ClusterSpec, rng: np.random.Generator) -> RunResult:
 
 
 # ---------------------------------------------------------------------------
-# Monte-Carlo aggregation (the paper repeats each configuration 32x)
+# Monte-Carlo aggregation (the paper repeats each configuration 32x; the
+# batched engine in core/mc.py makes >=1024 trials the cheap default)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -286,6 +287,13 @@ class Summary:
     def row(self, key: str) -> Tuple[float, float]:
         return getattr(self, key)
 
+    def ci95(self, key: str) -> float:
+        """95% CI half-width of the mean of ``key`` over completed runs."""
+        _, std = getattr(self, key)
+        if self.n_completed <= 1:
+            return float("nan")
+        return 1.96 * std / math.sqrt(self.n_completed)
+
 
 def _mean_std(xs: Sequence[float]) -> Tuple[float, float]:
     if not xs:
@@ -294,9 +302,8 @@ def _mean_std(xs: Sequence[float]) -> Tuple[float, float]:
     return (float(a.mean()), float(a.std()))
 
 
-def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0) -> Summary:
-    rng = np.random.default_rng(seed)
-    results = [simulate_run(spec, rng) for _ in range(n_runs)]
+def summarize(results: Sequence[RunResult], n_runs: int) -> Summary:
+    """Aggregate per-run results into the paper's reporting shape."""
     done = [r for r in results if r.completed]
     rev_counts: Dict[int, int] = {}
     for r in done:
@@ -318,5 +325,25 @@ def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0) -> Summary
         cost=_mean_std([r.cost_usd for r in done]),
         acc=_mean_std([r.accuracy for r in done]),
         by_r=by_r,
-        results=results,
+        results=list(results),
     )
+
+
+def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
+                  engine: str = "batched") -> Summary:
+    """Monte-Carlo over ``n_runs`` independent trials of ``spec``.
+
+    ``engine="batched"`` (default) runs all trials as one vectorized array
+    program (core/mc.py); ``engine="legacy"`` replays the original
+    per-trial Python event loop.  Both draw from the same distributions but
+    consume the RNG stream in a different order, so they agree statistically
+    (same means/failure rates within MC noise), not trial-for-trial.
+    """
+    rng = np.random.default_rng(seed)
+    if engine == "batched":
+        from repro.core import mc      # late import: mc imports this module
+        return mc.summarize_batch(mc.simulate_batch(spec, n_runs, rng))
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected 'batched' or 'legacy'")
+    return summarize([simulate_run(spec, rng) for _ in range(n_runs)], n_runs)

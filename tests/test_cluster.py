@@ -1,5 +1,8 @@
 """SparseCluster invariants (property-based): the sparse-mapping contract."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster import SlotState, SparseCluster

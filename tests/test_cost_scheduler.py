@@ -1,6 +1,9 @@
 """Budget planner + heterogeneous scheduler invariants (C1/C7/C8)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pricing

@@ -1,0 +1,262 @@
+"""Batched Monte-Carlo engine: equivalence with the legacy per-trial loop,
+array invariants, speed, and the provisioning optimizer's Pareto frontier.
+
+Equivalence is statistical, not bitwise: both engines draw from the same
+calibrated distributions but consume the RNG stream in a different order,
+so means must agree within combined Monte-Carlo noise on fixed seeds.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import mc
+from repro.core.cost import PlanConfig, dominates, estimate, mc_validate
+from repro.core.scheduler import (evaluate_configurations,
+                                  optimize_provisioning,
+                                  sweep_configurations)
+from repro.core.simulator import (ClusterSpec, WorkerSpec, accuracy_model,
+                                  ps_capped_rate, simulate_many, simulate_run)
+
+
+def _engines(spec, n_batched=1024, n_legacy=256):
+    b = simulate_many(spec, n_runs=n_batched, seed=1, engine="batched")
+    l = simulate_many(spec, n_runs=n_legacy, seed=2, engine="legacy")
+    return b, l
+
+
+def _means_close(b, l, key, n_sigma=4.0):
+    (mb, sb), (ml, sl) = b.row(key), l.row(key)
+    se = np.hypot(sb / np.sqrt(max(b.n_completed, 1)),
+                  sl / np.sqrt(max(l.n_completed, 1)))
+    assert abs(mb - ml) <= n_sigma * se + 1e-9, \
+        f"{key}: batched {mb:.4f} vs legacy {ml:.4f} (se {se:.4f})"
+
+
+# --- batched vs legacy equivalence on fixed seeds --------------------------
+
+def test_ondemand_deterministic_exact():
+    """No revocations -> both engines are deterministic and must agree to
+    float precision (same closed-form event sequence)."""
+    for n in (1, 4):
+        spec = ClusterSpec.homogeneous("K80", n, transient=False)
+        b = simulate_many(spec, n_runs=8, seed=0, engine="batched")
+        l = simulate_many(spec, n_runs=8, seed=0, engine="legacy")
+        assert b.time_h[0] == pytest.approx(l.time_h[0], rel=1e-12)
+        assert b.cost[0] == pytest.approx(l.cost[0], rel=1e-12)
+        assert b.acc[0] == pytest.approx(l.acc[0], rel=1e-12)
+        assert b.failure_rate == l.failure_rate == 0.0
+
+
+def test_transient_means_match_legacy():
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+    b, l = _engines(spec)
+    for key in ("time_h", "cost", "acc"):
+        _means_close(b, l, key)
+    assert b.failure_rate == pytest.approx(l.failure_rate, abs=0.06)
+
+
+def test_master_failover_means_match_legacy():
+    spec = ClusterSpec.homogeneous("K80", 8, transient=True,
+                                   master_failover=True)
+    b, l = _engines(spec)
+    for key in ("time_h", "cost"):
+        _means_close(b, l, key)
+    assert b.failure_rate == pytest.approx(l.failure_rate, abs=0.03)
+    # mean revocations per completed run must agree too
+    rb = sum(r * n for r, n in b.revocation_counts.items()) / b.n_completed
+    rl = sum(r * n for r, n in l.revocation_counts.items()) / l.n_completed
+    assert rb == pytest.approx(rl, abs=0.35)
+
+
+def test_dynamic_join_means_match_legacy():
+    spec = ClusterSpec(
+        workers=(WorkerSpec("K80", True),
+                 WorkerSpec("K80", True, join_step=16_000),
+                 WorkerSpec("K80", True, join_step=32_000),
+                 WorkerSpec("K80", True, join_step=48_000)),
+        n_ps=1)
+    b, l = _engines(spec)
+    for key in ("time_h", "cost", "acc"):
+        _means_close(b, l, key)
+
+
+def test_geo_and_transient_ps_match_legacy():
+    geo = ClusterSpec((WorkerSpec("K80", True, "us-east1"),
+                       WorkerSpec("K80", True, "us-east1"),
+                       WorkerSpec("K80", True, "us-west1"),
+                       WorkerSpec("K80", True, "us-west1")), n_ps=1)
+    b, l = _engines(geo)
+    _means_close(b, l, "time_h")
+    ps_tr = ClusterSpec(tuple(WorkerSpec("K80", True) for _ in range(4)),
+                        n_ps=1, ps_transient=True)
+    b, l = _engines(ps_tr)
+    _means_close(b, l, "time_h")
+    assert any(r.failure == "ps_revoked" for r in b.results)
+    assert b.failure_rate == pytest.approx(l.failure_rate, abs=0.08)
+
+
+def test_failure_modes_match_legacy():
+    """Master revocation kills the run unless failover is on (paper's TF
+    semantics) — both engines must show the same failure taxonomy."""
+    spec = ClusterSpec.homogeneous("V100", 2, transient=True)
+    b = simulate_many(spec, n_runs=512, seed=3, engine="batched")
+    l = simulate_many(spec, n_runs=256, seed=4, engine="legacy")
+    fb = {r.failure for r in b.results if r.failure}
+    fl = {r.failure for r in l.results if r.failure}
+    assert "master_revoked" in fb and "master_revoked" in fl
+    assert b.failure_rate == pytest.approx(l.failure_rate, abs=0.1)
+    fixed = simulate_many(ClusterSpec.homogeneous("V100", 2, transient=True,
+                                                  master_failover=True),
+                          n_runs=512, seed=3, engine="batched")
+    assert all(r.failure != "master_revoked" for r in fixed.results)
+    assert fixed.n_completed > b.n_completed
+
+
+# --- vectorized helper parity ----------------------------------------------
+
+def test_vectorized_helpers_match_scalar():
+    rng = np.random.default_rng(0)
+    rates = rng.uniform(0, 200, size=64)
+    for n_ps in (0, 1, 2):
+        batch = mc.ps_capped_rate_batch(rates, n_ps)
+        for r, want in zip(rates, batch):
+            assert ps_capped_rate(float(r), n_ps) == pytest.approx(want)
+    ws = rng.uniform(1, 20, size=64)
+    got = mc.accuracy_model_batch(ws)
+    for w, g in zip(ws, got):
+        assert accuracy_model(float(w)) == pytest.approx(float(g))
+    dyn = mc.accuracy_model_batch(ws, dynamic=True, adaptive_lr=False)
+    for w, g in zip(ws, dyn):
+        assert accuracy_model(float(w), dynamic=True,
+                              adaptive_lr=False) == pytest.approx(float(g))
+
+
+# --- shape / dtype invariants ----------------------------------------------
+
+def test_batch_shapes_and_dtypes():
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+    n = 257                                  # deliberately not a power of 2
+    batch = mc.simulate_batch(spec, n, np.random.default_rng(0))
+    for name in ("time_h", "cost_usd", "accuracy", "steps_done",
+                 "avg_active_workers"):
+        arr = getattr(batch, name)
+        assert arr.shape == (n,), name
+        assert arr.dtype == np.float64, name
+    assert batch.status.shape == (n,) and batch.status.dtype == np.int64
+    assert batch.revocations.shape == (n,)
+    assert batch.revocations.dtype == np.int64
+    assert batch.lifetimes_h.shape == (n, 4)
+    assert batch.lifetimes_h.dtype == np.float64
+    assert batch.completed.dtype == np.bool_
+    # value sanity: failures have NaN accuracy, completions don't
+    assert np.isnan(batch.accuracy[~batch.completed]).all()
+    assert not np.isnan(batch.accuracy[batch.completed]).any()
+    assert (batch.time_h >= 0).all() and (batch.cost_usd > 0).all()
+    assert (batch.steps_done[batch.completed] == spec.total_steps).all()
+    with pytest.raises(ValueError):
+        mc.simulate_batch(spec, 0, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        simulate_many(spec, 8, seed=0, engine="nope")
+
+
+def test_summary_consistency():
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+    s = simulate_many(spec, n_runs=512, seed=9, engine="batched")
+    assert s.n_runs == 512 and len(s.results) == 512
+    assert s.n_completed == sum(1 for r in s.results if r.completed)
+    assert s.failure_rate == pytest.approx(1 - s.n_completed / s.n_runs)
+    assert sum(s.revocation_counts.values()) == s.n_completed
+    assert set(s.by_r) == set(s.revocation_counts)
+    assert s.ci95("time_h") < s.time_h[1]    # CI of mean < per-run sigma
+
+
+# --- speed: the refactor's reason to exist ---------------------------------
+
+def test_batched_engine_20x_faster_than_python_loop():
+    """1024 batched trials must beat a 1024-iteration Python loop by >=20x
+    (acceptance criterion; engine-to-engine, excluding shared aggregation).
+    Typical margin is 30-70x, so 20x has headroom against CI noise."""
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+    mc.simulate_batch(spec, 64, np.random.default_rng(0))       # warm-up
+    t_batched = min(
+        _timed(lambda: mc.simulate_batch(spec, 1024,
+                                         np.random.default_rng(5)))
+        for _ in range(3))
+    rng = np.random.default_rng(5)
+    t_loop = _timed(lambda: [simulate_run(spec, rng) for _ in range(1024)])
+    assert t_loop / t_batched >= 20.0, \
+        f"batched {t_batched*1e3:.1f}ms vs loop {t_loop*1e3:.1f}ms"
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# --- provisioning optimizer -------------------------------------------------
+
+def test_pareto_frontier_has_no_dominated_point():
+    rep = optimize_provisioning(budget_usd=2.83, max_failure_p=0.10,
+                                n_trials=256, seed=0,
+                                counts=(1, 2, 4), kinds=("K80", "V100"))
+    assert rep.estimates and rep.frontier
+    for f in rep.frontier:
+        assert not any(dominates(e, f) for e in rep.estimates), f.label
+    # every non-frontier point is dominated by someone
+    front_labels = {f.label for f in rep.frontier}
+    for e in rep.estimates:
+        if e.label not in front_labels:
+            assert any(dominates(o, e) for o in rep.estimates), e.label
+    assert rep.best is not None
+    assert rep.best.cost_usd <= 2.83 + 1e-9
+    assert rep.best.failure_p <= 0.10
+    assert rep.best.time_h == pytest.approx(
+        min(e.time_h for e in rep.estimates
+            if e.cost_usd <= 2.83 + 1e-9 and e.failure_p <= 0.10))
+
+
+def test_sweep_covers_requested_dimensions():
+    pts = sweep_configurations(kinds=("K80",), counts=(1, 4),
+                               ps_counts=(1, 2))
+    labels = [label for label, _ in pts]
+    assert "1xK80" in labels
+    assert "4xK80+1PS" in labels and "4xK80+2PS" in labels
+    assert "4xK80 on-demand" in labels
+    assert "4xK80 dynamic" in labels
+    assert "4xK80 2-region" in labels
+    by_label = dict(pts)
+    dyn = by_label["4xK80 dynamic"]
+    assert sorted(w.join_step for w in dyn.workers) == [0, 16000, 32000,
+                                                        48000]
+    geo = by_label["4xK80 2-region"]
+    assert {w.region for w in geo.workers} == {"us-east1", "us-west1"}
+    od = by_label["4xK80 on-demand"]
+    assert not any(w.transient for w in od.workers)
+
+
+def test_mc_validates_analytic_planner():
+    """The closed-form estimate (cost.py) and the MC distributions must
+    agree on the paper's flagship configuration to first order."""
+    cfg = PlanConfig((("K80", 4),), n_ps=1, transient=True)
+    an = estimate(cfg)
+    s = mc_validate(cfg, n_trials=1024, seed=0)
+    assert s.time_h[0] == pytest.approx(an.time_h, rel=0.15)
+    assert s.cost[0] == pytest.approx(an.cost_usd, rel=0.25)
+
+
+def test_evaluate_configurations_reports_cis():
+    ests = evaluate_configurations(
+        [("4xK80", ClusterSpec.homogeneous("K80", 4, transient=True,
+                                           master_failover=True))],
+        n_trials=512, seed=0)
+    (e,) = ests
+    assert e.n_trials == 512
+    assert e.time_ci95 > 0 and e.cost_ci95 > 0
+    # CI must shrink ~sqrt(n): 4x the trials -> about half the CI
+    (e4,) = evaluate_configurations(
+        [("4xK80", ClusterSpec.homogeneous("K80", 4, transient=True,
+                                           master_failover=True))],
+        n_trials=2048, seed=0)
+    assert e4.time_ci95 < e.time_ci95
