@@ -13,6 +13,8 @@ scheduler   heterogeneous shards, PS-capacity/collective map, offers,
             MC provisioning optimizer (C7/C8)
 simulator   event-driven Monte-Carlo of full training runs (Tables I-V)
 mc          batched (vectorized trial-axis) Monte-Carlo engine
+policy      online transient-aware provisioning policies + trace-replay
+            evaluator (static / greedy / lookahead-MC / oracle)
 """
 from repro.core.cluster import SparseCluster, SlotState  # noqa: F401
 from repro.core.checkpoint import CheckpointManager  # noqa: F401
@@ -25,3 +27,6 @@ from repro.core.mc import MCBatch, simulate_batch  # noqa: F401
 from repro.core.scheduler import (MCPlanEstimate,  # noqa: F401
                                   optimize_provisioning,
                                   sweep_configurations)
+from repro.core.policy import (GreedyCheapest, LookaheadMC,  # noqa: F401
+                               OraclePolicy, PolicyDecision, StaticPolicy,
+                               evaluate_policy)

@@ -138,9 +138,12 @@ def _sample_lifetimes(kind: str, n: int, rng: np.random.Generator) -> np.ndarray
 
 
 def _masked_mean_std(x: np.ndarray, m: np.ndarray) -> Tuple[float, float]:
+    """Mean/std over the masked selection; (0, 0) when nothing is selected
+    — degenerate aggregates must stay finite and warning-free (consumers
+    gate on ``n_completed``, not on NaN sentinels)."""
     sel = x[m]
     if sel.size == 0:
-        return (float("nan"), float("nan"))
+        return (0.0, 0.0)
     return (float(sel.mean()), float(sel.std()))
 
 
@@ -188,7 +191,7 @@ def summarize_batch(batch: MCBatch):
     return Summary(
         n_runs=batch.n_trials,
         n_completed=n_done,
-        failure_rate=1.0 - n_done / batch.n_trials,
+        failure_rate=1.0 - n_done / batch.n_trials if batch.n_trials else 0.0,
         revocation_counts=rev_counts,
         time_h=_masked_mean_std(batch.time_h, done),
         cost=_masked_mean_std(batch.cost_usd, done),
@@ -199,17 +202,33 @@ def summarize_batch(batch: MCBatch):
 
 
 def simulate_batch(spec: ClusterSpec, n_trials: int,
-                   rng: np.random.Generator) -> MCBatch:
+                   rng: np.random.Generator, *,
+                   replay=None) -> MCBatch:
     """Run ``n_trials`` independent Monte-Carlo trials of ``spec``, batched.
 
     Equivalent to ``[simulate_run(spec, rng) for _ in range(n_trials)]`` up
     to RNG consumption order; see the module docstring.
+
+    ``replay`` (a ``traces.replay.ReplayContext``) swaps the stochastic
+    lifetime sampling for trace playback: each trial is assigned a
+    bootstrap window of the trace and draws its lifetimes from that
+    window's observed revocations, and transient servers bill against the
+    trace's piecewise-constant spot-price path instead of the static book
+    price. With ``replay=None`` behaviour is unchanged.
     """
     if n_trials <= 0:
         raise ValueError(f"n_trials must be positive, got {n_trials}")
     N, W = n_trials, len(spec.workers)
     if W == 0:
         raise ValueError("spec has no workers")
+
+    bound = replay.bind(N, rng) if replay is not None else None
+
+    def draw_lifetimes(kind: str, trial_idx: np.ndarray,
+                       at_s) -> np.ndarray:
+        if bound is not None:
+            return bound.lifetimes(kind, trial_idx, at_s, rng)
+        return _sample_lifetimes(kind, trial_idx.size, rng)
 
     # --- static per-slot attributes ------------------------------------
     rate_w = np.array([_worker_rate(w, spec.ps_region) for w in spec.workers])
@@ -234,13 +253,14 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
             provisioned[:, j] = True
             start_t[:, j] = 0.0
             if transient_w[j]:
-                revoke_t[:, j] = _sample_lifetimes(spec.workers[j].kind, N, rng)
+                revoke_t[:, j] = draw_lifetimes(spec.workers[j].kind,
+                                                np.arange(N), 0.0)
 
     # Parameter servers: the run dies at the FIRST PS revocation, so only
     # min-over-PS matters; each PS bills to the trial's end either way.
     if spec.n_ps > 0 and spec.ps_transient:
-        ps_revoke = _sample_lifetimes("PS", N * spec.n_ps, rng) \
-            .reshape(N, spec.n_ps).min(axis=1)
+        ps_revoke = draw_lifetimes("PS", np.repeat(np.arange(N), spec.n_ps),
+                                   0.0).reshape(N, spec.n_ps).min(axis=1)
     else:
         ps_revoke = np.full(N, np.inf)
 
@@ -333,8 +353,8 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
             for s in np.unique(slots):
                 sel = idx[slots == s]
                 if transient_w[s]:
-                    revoke_t[sel, s] = t[sel] + _sample_lifetimes(
-                        spec.workers[s].kind, len(sel), rng)
+                    revoke_t[sel, s] = t[sel] + draw_lifetimes(
+                        spec.workers[s].kind, sel, t[sel])
     status[status == RUNNING] = NO_PROGRESS
 
     # --- billing: per-second, each server to min(revocation, run end) ---
@@ -342,9 +362,25 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
     bill_end = np.minimum(revoke_t, t_end)     # inf (never revoked) -> t_end
     with np.errstate(invalid="ignore"):        # NaN start = never provisioned
         secs = np.where(provisioned, np.maximum(0.0, bill_end - start_t), 0.0)
-    cost = (secs * price_s).sum(axis=1)
-    cost += spec.n_ps * pricing.SERVER_TYPES["PS"].price_hr(
-        spec.ps_transient) * t / 3600.0
+    if bound is None:
+        cost = (secs * price_s).sum(axis=1)
+    else:
+        # transient slots bill against the trace's spot path (exact
+        # piecewise-constant integral); on-demand slots keep book price
+        cost = np.zeros(N)
+        for j in range(W):
+            if transient_w[j] and bound.has_prices(spec.workers[j].kind):
+                s0 = np.where(provisioned[:, j],
+                              np.nan_to_num(start_t[:, j]), 0.0)
+                cost += bound.cost_usd(spec.workers[j].kind, s0,
+                                       s0 + secs[:, j])
+            else:
+                cost += secs[:, j] * price_s[j]
+    if bound is not None and spec.ps_transient and bound.has_prices("PS"):
+        cost += spec.n_ps * bound.cost_usd("PS", np.zeros(N), t)
+    else:
+        cost += spec.n_ps * pricing.SERVER_TYPES["PS"].price_hr(
+            spec.ps_transient) * t / 3600.0
 
     avg_w = np.divide(worker_int, t, out=np.zeros(N), where=t > 0)
     dynamic = bool((join_step_w > 0).any())

@@ -7,6 +7,7 @@ on-demand unit-price ratio, matching the paper's Table II column.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict
 
 
@@ -53,6 +54,20 @@ def server_cost(kind: str, seconds: float, transient: bool) -> float:
 
 def hourly_cost(kind: str, seconds: float, transient: bool) -> float:
     """Legacy hour-granularity billing (for the paper's comparison)."""
-    import math
     hours = math.ceil(seconds / 3600.0) if seconds > 0 else 0
     return SERVER_TYPES[kind].price_hr(transient) * hours
+
+
+def price_at(kind: str, t: float, trace=None, *,
+             transient: bool = True) -> float:
+    """Spot $/hr for ``kind`` at simulation time ``t`` (seconds).
+
+    The replay hook: with a ``trace`` (a ``traces.Trace`` or a
+    ``traces.replay.ReplayContext``) the quote follows the trace's
+    piecewise-constant price path; without one it is the static Table II
+    book price. On-demand prices never float.
+    """
+    if not transient or trace is None:
+        return SERVER_TYPES[kind].price_hr(transient)
+    from repro.traces.replay import context_for   # late: traces import us
+    return float(context_for(trace).price_at(kind, t))

@@ -308,13 +308,17 @@ class MCPlanEstimate:
 
 def evaluate_configurations(points: Sequence[Tuple[str, "ClusterSpec"]],
                             *, n_trials: int = 1024,
-                            seed: int = 0) -> List[MCPlanEstimate]:
-    """Score each candidate over ``n_trials`` batched Monte-Carlo trials."""
+                            seed: int = 0, trace=None) -> List[MCPlanEstimate]:
+    """Score each candidate over ``n_trials`` batched Monte-Carlo trials.
+
+    ``trace`` switches the scoring to trace-driven replay (bootstrap
+    lifetimes + spot-price billing) — the same candidates ranked against a
+    recorded/synthetic market instead of the closed-form mixtures."""
     from repro.core.simulator import simulate_many
     out: List[MCPlanEstimate] = []
     for i, (label, spec) in enumerate(points):
         s = simulate_many(spec, n_runs=n_trials, seed=seed + i,
-                          engine="batched")
+                          engine="batched", trace=trace)
         if s.n_completed == 0:
             continue
         # baseline = 1 on-demand K80 on the SAME workload length
@@ -341,17 +345,20 @@ def optimize_provisioning(*, budget_usd: Optional[float] = None,
                           max_failure_p: float = 1.0,
                           min_accuracy: float = 0.0,
                           n_trials: int = 1024, seed: int = 0,
+                          trace=None,
                           **sweep_kwargs) -> ProvisioningReport:
     """Sweep cluster configurations over the MC distributions (the paper's
     §III-C question, answered with distributions instead of expectations).
 
     Returns every scored candidate, the cost/time/accuracy Pareto frontier,
     and the fastest candidate satisfying the budget / failure / accuracy
-    constraints (``best is None`` when nothing qualifies).
+    constraints (``best is None`` when nothing qualifies). With ``trace``
+    the sweep is scored by trace replay rather than mixture sampling —
+    still a *static* choice; ``core/policy.py`` is the online version.
     """
     from repro.core import cost as cost_mod
     ests = evaluate_configurations(sweep_configurations(**sweep_kwargs),
-                                   n_trials=n_trials, seed=seed)
+                                   n_trials=n_trials, seed=seed, trace=trace)
     frontier = tuple(cost_mod.pareto_front(ests))
     feasible = [e for e in ests
                 if (budget_usd is None or e.cost_usd <= budget_usd + 1e-9)

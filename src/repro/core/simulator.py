@@ -290,14 +290,24 @@ class Summary:
     def ci95(self, key: str) -> float:
         """95% CI half-width of the mean of ``key`` over completed runs."""
         _, std = getattr(self, key)
-        if self.n_completed <= 1:
-            return float("nan")
-        return 1.96 * std / math.sqrt(self.n_completed)
+        return ci95_halfwidth(std, self.n_completed)
+
+
+def ci95_halfwidth(std: float, n: int) -> float:
+    """Shared CI convention for every aggregate in the repo (engine
+    summaries and policy outcomes alike): 1.96·σ/√n, with degenerate
+    counts (n<=1) yielding 0.0, not NaN — a single observation carries no
+    spread information, callers gate significance on the count, and NaN
+    would only propagate into downstream arithmetic and RuntimeWarnings.
+    """
+    if n <= 1 or not math.isfinite(std):
+        return 0.0
+    return 1.96 * std / math.sqrt(n)
 
 
 def _mean_std(xs: Sequence[float]) -> Tuple[float, float]:
     if not xs:
-        return (float("nan"), float("nan"))
+        return (0.0, 0.0)       # degenerate: finite, gated by n_completed
     a = np.asarray(xs, dtype=float)
     return (float(a.mean()), float(a.std()))
 
@@ -319,7 +329,7 @@ def summarize(results: Sequence[RunResult], n_runs: int) -> Summary:
     return Summary(
         n_runs=n_runs,
         n_completed=len(done),
-        failure_rate=1.0 - len(done) / n_runs,
+        failure_rate=1.0 - len(done) / n_runs if n_runs else 0.0,
         revocation_counts=rev_counts,
         time_h=_mean_std([r.time_h for r in done]),
         cost=_mean_std([r.cost_usd for r in done]),
@@ -330,7 +340,7 @@ def summarize(results: Sequence[RunResult], n_runs: int) -> Summary:
 
 
 def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
-                  engine: str = "batched") -> Summary:
+                  engine: str = "batched", trace=None) -> Summary:
     """Monte-Carlo over ``n_runs`` independent trials of ``spec``.
 
     ``engine="batched"`` (default) runs all trials as one vectorized array
@@ -338,12 +348,27 @@ def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
     per-trial Python event loop.  Both draw from the same distributions but
     consume the RNG stream in a different order, so they agree statistically
     (same means/failure rates within MC noise), not trial-for-trial.
+
+    ``trace`` (a ``traces.Trace`` or ``traces.replay.ReplayContext``)
+    switches the batched engine to trace-driven replay: lifetimes are
+    bootstrap-resampled from the trace's observed revocations (per-trial
+    windows) and transient billing follows the trace's spot-price path.
+    Replay keeps the batched speedup — it is the same vectorized event
+    loop with a different sampler — and is batched-only (the legacy loop
+    predates the trace subsystem).
     """
     rng = np.random.default_rng(seed)
     if engine == "batched":
         from repro.core import mc      # late import: mc imports this module
-        return mc.summarize_batch(mc.simulate_batch(spec, n_runs, rng))
+        replay = None
+        if trace is not None:
+            from repro.traces.replay import context_for
+            replay = context_for(trace)
+        return mc.summarize_batch(mc.simulate_batch(spec, n_runs, rng,
+                                                    replay=replay))
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'batched' or 'legacy'")
+    if trace is not None:
+        raise ValueError("trace replay requires engine='batched'")
     return summarize([simulate_run(spec, rng) for _ in range(n_runs)], n_runs)

@@ -67,6 +67,30 @@ class LifetimeModel:
         return self.p_early + mid_mass * float(mid_frac)
 
 
+class EmpiricalLifetime:
+    """Lifetime distribution defined by observed samples (trace replay).
+
+    Bootstrap-resamples the observation vector; ``p_revoked_by`` is the
+    empirical CDF. Shares ``sample``/``p_revoked_by`` with
+    ``LifetimeModel`` so the planner and the replay path are
+    interchangeable consumers.
+    """
+
+    def __init__(self, samples_s: np.ndarray):
+        samples = np.asarray(samples_s, dtype=np.float64)
+        if samples.ndim != 1 or samples.size == 0:
+            raise ValueError("need a non-empty 1-D sample vector")
+        if (samples <= 0).any():
+            raise ValueError("lifetimes must be positive")
+        self.samples = np.minimum(samples, MAX_LIFETIME_S)
+
+    def sample(self, rng: np.random.Generator, n: int = 1) -> np.ndarray:
+        return self.samples[rng.integers(self.samples.size, size=n)]
+
+    def p_revoked_by(self, t: float) -> float:
+        return float(np.mean(self.samples <= t))
+
+
 # Calibration: match the per-type early-revocation observations above while
 # keeping the aggregate Fig-3 shape (~70% reach the cap).
 LIFETIMES = {

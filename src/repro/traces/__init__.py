@@ -1,0 +1,26 @@
+"""Trace subsystem: recorded/synthetic transient-market timelines.
+
+The paper's redesign call is that transient conditions are *dynamic*:
+prices drift, revocation intensity comes in bursts, capacity appears and
+disappears. The static closed-form lifetime mixtures in
+``core/transient.py`` average all of that away. This package makes the
+timeline a first-class object:
+
+schema   ``Trace``/``TraceEvent`` — timestamped per-zone, per-type spot
+         price updates, revocation observations, and capacity changes,
+         with lossless JSONL and npz round-trip serialization.
+synth    deterministic generators calibrated to the paper's Fig 3
+         lifetime mixtures plus a mean-reverting (OU) spot-price process.
+replay   vectorized trace playback for the batched MC engine
+         (``ReplayContext``): bootstrap-resampled lifetime windows and
+         piecewise-constant price integration, keeping the trial axis an
+         array axis.
+
+``simulate_many(..., trace=...)`` and the policy layer
+(``core/policy.py``) consume these.
+"""
+from repro.traces.schema import (EVENT_KINDS, Trace,  # noqa: F401
+                                 TraceEvent)
+from repro.traces.synth import (default_trace_suite,  # noqa: F401
+                                synthetic_trace, trace_from_model)
+from repro.traces.replay import ReplayContext  # noqa: F401

@@ -4,6 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.experimental.pallas import tpu as pltpu
+
+# Every kernel builds its grid with pltpu.CompilerParams (jax >= 0.5); on
+# the 0.4.x toolchain that attribute is still TPUCompilerParams, so the
+# whole sweep is a known incompatibility, not a regression. Explicit skip
+# instead of CI-level --ignore so collection stays honest (ISSUE 2).
+pytestmark = pytest.mark.skipif(
+    not hasattr(pltpu, "CompilerParams"),
+    reason="kernels use pltpu.CompilerParams (jax>=0.5); installed jax "
+           "predates it")
 
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_ref)

@@ -195,6 +195,35 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
+# --- degenerate trial counts (regression: no NaN / RuntimeWarning) ----------
+
+def test_degenerate_counts_no_nan_or_warning():
+    """n=1 trials and 0-completed batches must summarize to finite values
+    without numpy RuntimeWarnings (ISSUE satellite)."""
+    import warnings
+
+    ok = ClusterSpec.homogeneous("K80", 2, transient=False)
+    # needs ~153 h of compute but the transient PS dies within 24 h:
+    # every trial fails, so all completed-trial aggregates are degenerate
+    doomed = ClusterSpec(tuple(WorkerSpec("K80", True) for _ in range(4)),
+                         n_ps=1, ps_transient=True, total_steps=10_000_000)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for engine in ("batched", "legacy"):
+            s1 = simulate_many(ok, n_runs=1, seed=0, engine=engine)
+            assert s1.n_runs == 1 and s1.n_completed == 1
+            for key in ("time_h", "cost", "acc"):
+                m, sd = s1.row(key)
+                assert np.isfinite(m) and np.isfinite(sd), (engine, key)
+                assert s1.ci95(key) == 0.0, (engine, key)
+        s0 = simulate_many(doomed, n_runs=64, seed=0, engine="batched")
+        assert s0.n_completed == 0 and s0.failure_rate == 1.0
+        for key in ("time_h", "cost", "acc"):
+            m, sd = s0.row(key)
+            assert np.isfinite(m) and np.isfinite(sd), key
+            assert s0.ci95(key) == 0.0, key
+
+
 # --- provisioning optimizer -------------------------------------------------
 
 def test_pareto_frontier_has_no_dominated_point():

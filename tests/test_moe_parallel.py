@@ -14,12 +14,22 @@ from repro.sharding import param_spec, use_mesh
 
 ARCHS = ("moonshot-v1-16b-a3b", "arctic-480b")
 
+# The ep/a2a MoE paths call jax.shard_map, promoted out of
+# jax.experimental in jax >= 0.5; on the 0.4.x toolchain the attribute
+# does not exist. Known incompatibility — explicit skip instead of a
+# CI-level --ignore so the remaining layout tests keep running (ISSUE 2).
+needs_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="moe_impl='ep'/'a2a' need jax.shard_map (jax>=0.5); installed "
+           "jax only has jax.experimental.shard_map")
+
 
 @pytest.fixture(scope="module")
 def mesh():
     return single_device_mesh()
 
 
+@needs_shard_map
 @pytest.mark.parametrize("arch", ARCHS)
 def test_ep_matches_gspmd(arch, mesh):
     cfg = get_config(arch, reduced=True).replace(dtype="float32")
@@ -36,6 +46,7 @@ def test_ep_matches_gspmd(arch, mesh):
     assert abs(float(ax) - float(ap)) < 1e-5
 
 
+@needs_shard_map
 @pytest.mark.parametrize("arch", ARCHS)
 def test_a2a_matches_gspmd(arch, mesh):
     # B=1 so the per-rank token pool equals the gspmd per-row pool exactly
@@ -63,6 +74,7 @@ def test_a2a_falls_back_outside_mesh():
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 
+@needs_shard_map
 def test_a2a_is_differentiable(mesh):
     cfg = get_config("moonshot-v1-16b-a3b",
                      reduced=True).replace(dtype="float32", moe_impl="a2a")

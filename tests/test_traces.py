@@ -1,0 +1,263 @@
+"""Trace subsystem: schema round-trips, synth determinism, replay
+consistency with distribution sampling, and the price-path integral."""
+import numpy as np
+import pytest
+
+from repro.core import pricing
+from repro.core.scheduler import evaluate_configurations
+from repro.core.simulator import ClusterSpec, simulate_many
+from repro.core.transient import LIFETIMES, MAX_LIFETIME_S, EmpiricalLifetime
+from repro.traces import Trace, TraceEvent
+from repro.traces.replay import ReplayContext, context_for
+from repro.traces.synth import (default_trace_suite, synthetic_trace,
+                                trace_from_model)
+
+
+# --- schema ----------------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        TraceEvent(0.0, "nonsense", "K80", "us-east1", 1.0)
+    with pytest.raises(ValueError):
+        TraceEvent(-1.0, "price", "K80", "us-east1", 1.0)
+    with pytest.raises(ValueError):
+        TraceEvent(0.0, "price", "K80", "us-east1", 0.0)   # price > 0
+    with pytest.raises(ValueError):
+        TraceEvent(0.0, "revoke", "K80", "us-east1", -5.0)
+
+
+def test_trace_validation_and_sorting():
+    evs = (TraceEvent(100.0, "price", "K80", "z", 0.3),
+           TraceEvent(0.0, "price", "K80", "z", 0.2))
+    tr = Trace("t", 200.0, evs)
+    assert [e.t for e in tr.events] == [0.0, 100.0]     # sorted on build
+    assert tr == Trace("t", 200.0, evs[::-1])           # order-insensitive
+    with pytest.raises(ValueError):
+        Trace("t", 50.0, evs)                           # event past horizon
+    with pytest.raises(ValueError):
+        Trace("t", 0.0, ())
+
+
+def test_jsonl_roundtrip_lossless(tmp_path):
+    tr = synthetic_trace("rt", seed=7, revocations_per_kind=32,
+                         price_interval_s=3600.0)
+    p = tmp_path / "t.jsonl"
+    tr.to_jsonl(str(p))
+    assert Trace.from_jsonl(str(p)) == tr
+
+
+def test_npz_roundtrip_lossless(tmp_path):
+    tr = synthetic_trace("rt", seed=7, revocations_per_kind=32,
+                         price_interval_s=3600.0)
+    p = tmp_path / "t.npz"
+    tr.to_npz(str(p))
+    assert Trace.from_npz(str(p)) == tr
+
+
+def test_roundtrip_preserves_exact_floats(tmp_path):
+    # adversarial doubles: json must repr-round-trip them exactly
+    vals = [0.1, 1 / 3, np.nextafter(1.0, 2.0), 1e-300, 12345.678901234567]
+    evs = tuple(TraceEvent(float(i), "price", "K80", "z", v)
+                for i, v in enumerate(vals))
+    tr = Trace("floats", 10.0, evs)
+    pj, pn = tmp_path / "f.jsonl", tmp_path / "f.npz"
+    tr.to_jsonl(str(pj))
+    tr.to_npz(str(pn))
+    for back in (Trace.from_jsonl(str(pj)), Trace.from_npz(str(pn))):
+        assert [e.value for e in back.events] == vals
+
+
+def test_jsonl_minimal_header_uses_defaults(tmp_path):
+    """A hand-authored header may omit the optional meta fields."""
+    p = tmp_path / "min.jsonl"
+    p.write_text('{"trace": {"name": "prod", "horizon_s": 86400.0}}\n'
+                 '{"t": 0.0, "event": "price", "kind": "K80", '
+                 '"zone": "us-east1", "value": 0.3}\n')
+    tr = Trace.from_jsonl(str(p))
+    assert tr.name == "prod" and tr.source == "recorded"
+    assert tr.seed is None and len(tr.events) == 1
+
+
+def test_window_and_columns():
+    tr = synthetic_trace("w", seed=0, revocations_per_kind=64,
+                         price_interval_s=3600.0)
+    sub = tr.window(3600.0, 7200.0)
+    assert sub.horizon_s == pytest.approx(3600.0)
+    assert all(0 <= e.t < 3600.0 for e in sub.events)
+    lives = tr.lifetimes("K80")
+    assert lives.size == 64 and (lives > 0).all()
+
+
+def test_synth_deterministic():
+    a = synthetic_trace("d", seed=3, revocations_per_kind=16)
+    b = synthetic_trace("d", seed=3, revocations_per_kind=16)
+    c = synthetic_trace("d", seed=4, revocations_per_kind=16)
+    assert a == b
+    assert a != c
+    assert all(x == y for x, y in zip(default_trace_suite(0),
+                                      default_trace_suite(0)))
+
+
+# --- replay: price path ----------------------------------------------------
+
+def _price_trace():
+    evs = (TraceEvent(0.0, "price", "K80", "z", 0.2),
+           TraceEvent(3600.0, "price", "K80", "z", 0.4))
+    return Trace("p", 10 * 3600.0, evs)
+
+
+def test_price_path_lookup_and_integral():
+    ctx = ReplayContext(_price_trace())
+    assert float(ctx.price_at("K80", 0.0)) == 0.2
+    assert float(ctx.price_at("K80", 3599.0)) == 0.2
+    assert float(ctx.price_at("K80", 3600.0)) == 0.4
+    assert float(ctx.price_at("K80", 9e9)) == 0.4       # holds flat forever
+    # [0.5h, 1.5h): half an hour at each price
+    got = float(ctx.cost_usd("K80", 1800.0, 5400.0))
+    assert got == pytest.approx(0.5 * 0.2 + 0.5 * 0.4)
+    # kinds with no price events bill at book transient price
+    book = pricing.SERVER_TYPES["V100"].transient_hr
+    assert float(ctx.price_at("V100", 0.0)) == pytest.approx(book)
+    assert float(ctx.cost_usd("V100", 0.0, 3600.0)) == pytest.approx(book)
+    assert not ctx.has_prices("V100") and ctx.has_prices("K80")
+
+
+def test_pricing_price_at_hook():
+    tr = _price_trace()
+    assert pricing.price_at("K80", 1800.0, tr) == 0.2
+    assert pricing.price_at("K80", 7200.0, tr) == 0.4
+    book_t = pricing.SERVER_TYPES["K80"].transient_hr
+    book_od = pricing.SERVER_TYPES["K80"].ondemand_hr
+    assert pricing.price_at("K80", 0.0) == book_t
+    assert pricing.price_at("K80", 0.0, tr, transient=False) == book_od
+
+
+def test_context_cache_and_unknown_kind():
+    tr = _price_trace()
+    assert context_for(tr) is context_for(tr)
+    ctx = context_for(tr)
+    assert context_for(ctx) is ctx
+    # memoized on the trace itself: no module-global cache to leak when
+    # many traces stream through simulate_many(trace=...)
+    import repro.traces.replay as replay_mod
+    assert getattr(tr, "_default_ctx") is ctx
+    assert not hasattr(replay_mod, "_CTX_CACHE")
+    bad = Trace("bad", 10.0,
+                (TraceEvent(0.0, "price", "TPUv9", "z", 1.0),))
+    with pytest.raises(ValueError):
+        ReplayContext(bad)
+
+
+# --- replay: lifetime bootstrap --------------------------------------------
+
+def test_window_conditioned_lifetimes():
+    """A storm in the first half must be visible only to servers that
+    activate during it."""
+    h = 2000.0
+    evs = []
+    for i in range(16):      # first half: 100 s lives; second: near-cap
+        evs.append(TraceEvent(i * h / 32, "revoke", "K80", "z", 100.0))
+        evs.append(TraceEvent(h / 2 + i * h / 32, "revoke", "K80", "z",
+                              80_000.0))
+    tr = Trace("storm", h, tuple(evs))
+    ctx = ReplayContext(tr, n_windows=2)
+    rng = np.random.default_rng(0)
+    bound = ctx.bind(64, rng, bootstrap="zero")
+    idx = np.arange(64)
+    early = bound.lifetimes("K80", idx, np.zeros(64), rng)
+    late = bound.lifetimes("K80", idx, np.full(64, 0.75 * h), rng)
+    assert (early == 100.0).all()
+    assert (late == 80_000.0).all()
+    # beyond the horizon clips to the last window
+    past = bound.lifetimes("K80", idx, np.full(64, 10 * h), rng)
+    assert (past == 80_000.0).all()
+
+
+def test_lifetime_fallbacks():
+    # no revoke events at all for a kind -> calibrated mixture
+    ctx = ReplayContext(_price_trace())
+    rng = np.random.default_rng(0)
+    bound = ctx.bind(512, rng, bootstrap="zero")
+    s = bound.lifetimes("K80", np.arange(512), np.zeros(512), rng)
+    assert (s > 0).all() and (s <= MAX_LIFETIME_S).all()
+    assert np.unique(s).size > 100          # continuous mixture, not empirical
+    # sparse windows (< min obs) fall back to the kind's full vector
+    evs = tuple(TraceEvent(10.0 * i, "revoke", "P100", "z", 500.0 + i)
+                for i in range(9))          # all in window 0 of 8
+    ctx2 = ReplayContext(Trace("sparse", 9000.0, evs))
+    b2 = ctx2.bind(32, rng, bootstrap="zero")
+    got = b2.lifetimes("P100", np.arange(32), np.full(32, 8000.0), rng)
+    assert set(got).issubset({500.0 + i for i in range(9)})
+
+
+def test_empirical_lifetime():
+    e = EmpiricalLifetime(np.array([100.0, 200.0, 300.0]))
+    assert e.p_revoked_by(150.0) == pytest.approx(1 / 3)
+    assert e.p_revoked_by(1e9) == 1.0
+    s = e.sample(np.random.default_rng(0), 64)
+    assert set(s).issubset({100.0, 200.0, 300.0})
+    with pytest.raises(ValueError):
+        EmpiricalLifetime(np.array([]))
+    with pytest.raises(ValueError):
+        EmpiricalLifetime(np.array([0.0]))
+
+
+# --- the consistency satellite: replay == distribution sampling ------------
+
+def _means_close(a, b, key, n_sigma=4.0):
+    (ma, sa), (mb, sb) = a.row(key), b.row(key)
+    se = np.hypot(sa / np.sqrt(max(a.n_completed, 1)),
+                  sb / np.sqrt(max(b.n_completed, 1)))
+    assert abs(ma - mb) <= n_sigma * se + 1e-9, \
+        f"{key}: replay {ma:.4f} vs direct {mb:.4f} (se {se:.4f})"
+
+
+def test_replay_of_model_trace_matches_distribution_sampling():
+    """Replaying a trace generated FROM a LifetimeModel must agree
+    statistically with sampling the model directly — pins the trace
+    path to the validated engine (ISSUE satellite #1)."""
+    null = trace_from_model(seed=11, events_per_kind=4096)
+    for spec in (ClusterSpec.homogeneous("K80", 4, transient=True,
+                                         master_failover=True),
+                 ClusterSpec.homogeneous("V100", 2, transient=True)):
+        rep = simulate_many(spec, n_runs=2048, seed=1, trace=null)
+        direct = simulate_many(spec, n_runs=2048, seed=2)
+        for key in ("time_h", "cost", "acc"):
+            _means_close(rep, direct, key)
+        assert rep.failure_rate == pytest.approx(direct.failure_rate,
+                                                 abs=0.06)
+
+
+def test_replay_deterministic_and_legacy_rejected():
+    null = trace_from_model(seed=5, events_per_kind=256)
+    spec = ClusterSpec.homogeneous("K80", 2, transient=True)
+    a = simulate_many(spec, n_runs=64, seed=3, trace=null)
+    b = simulate_many(spec, n_runs=64, seed=3, trace=null)
+    assert a.time_h == b.time_h and a.cost == b.cost
+    with pytest.raises(ValueError):
+        simulate_many(spec, n_runs=8, seed=0, engine="legacy", trace=null)
+
+
+def test_storm_trace_changes_outcomes():
+    """A revocation storm at launch must hurt replayed clusters relative
+    to the calm mixture — the whole point of trace-driven evaluation."""
+    storm = synthetic_trace(
+        "storm", seed=2, revocations_per_kind=512,
+        lifetime_burst={"K80": [(0.0, 0.5, 0.02)]})
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True,
+                                   master_failover=True)
+    ctx = ReplayContext(storm, bootstrap="zero")
+    rep = simulate_many(spec, n_runs=512, seed=1, trace=ctx)
+    direct = simulate_many(spec, n_runs=512, seed=1)
+    # storm lifetimes are ~minutes: far more failed/slow runs than calm
+    assert rep.failure_rate > direct.failure_rate + 0.2
+
+
+def test_optimizer_accepts_trace():
+    null = trace_from_model(seed=9, events_per_kind=512)
+    ests = evaluate_configurations(
+        [("4xK80", ClusterSpec.homogeneous("K80", 4, transient=True,
+                                           master_failover=True))],
+        n_trials=256, seed=0, trace=null)
+    (e,) = ests
+    assert e.n_trials == 256 and e.cost_usd > 0

@@ -1,0 +1,70 @@
+"""Property tests for the lifetime mixture model (ISSUE satellite):
+masses sum to 1, the CDF is monotone, samples respect the 24 h cap."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transient import LIFETIMES, MAX_LIFETIME_S, LifetimeModel
+
+
+@st.composite
+def models(draw):
+    p_early = draw(st.floats(0.0, 0.9))
+    p_cap = draw(st.floats(0.0, 1.0 - p_early))
+    window = draw(st.floats(600.0, 6 * 3600.0))
+    return LifetimeModel(p_early=p_early, early_window=window, p_cap=p_cap)
+
+
+def test_calibrated_mixture_masses_sum_to_one():
+    for kind, m in LIFETIMES.items():
+        mid = 1.0 - m.p_early - m.p_cap
+        assert 0.0 <= m.p_early <= 1.0 and 0.0 <= m.p_cap <= 1.0, kind
+        assert mid >= 0.0, kind
+        assert m.p_early + mid + m.p_cap == pytest.approx(1.0), kind
+        assert m.p_revoked_by(0.0) == 0.0
+        assert m.p_revoked_by(MAX_LIFETIME_S) == 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(models())
+def test_cdf_bounds_and_mass_split(m):
+    assert m.p_revoked_by(0.0) == 0.0
+    assert m.p_revoked_by(MAX_LIFETIME_S) == 1.0
+    # the early phase carries exactly p_early of the mass
+    assert m.p_revoked_by(m.early_window) == pytest.approx(m.p_early,
+                                                           abs=1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(models(),
+       st.floats(0.0, MAX_LIFETIME_S),
+       st.floats(0.0, MAX_LIFETIME_S))
+def test_cdf_monotone(m, t1, t2):
+    lo, hi = sorted((t1, t2))
+    assert m.p_revoked_by(lo) <= m.p_revoked_by(hi) + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(models(), st.integers(0, 2**32 - 1))
+def test_samples_within_cap(m, seed):
+    s = m.sample(np.random.default_rng(seed), 256)
+    assert s.shape == (256,)
+    assert (s >= 0.0).all()
+    assert (s <= MAX_LIFETIME_S).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(models(), st.integers(0, 2**32 - 1))
+def test_sample_fractions_match_masses(m, seed):
+    """Large-sample mass split must track (p_early, mid, p_cap)."""
+    n = 4096
+    s = m.sample(np.random.default_rng(seed), n)
+    tol = 4.0 / np.sqrt(n)  # ~4 sigma for a Bernoulli proportion
+    # the early exponential lives in [0, window], the uniform middle in
+    # (window, cap), the atom exactly at the cap
+    assert np.mean(s <= m.early_window) == pytest.approx(m.p_early,
+                                                         abs=tol)
+    assert np.mean(s == MAX_LIFETIME_S) == pytest.approx(m.p_cap, abs=tol)
