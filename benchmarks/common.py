@@ -19,8 +19,15 @@ def fmt_ms(mean: float, std: float = None) -> str:
     return f"({mean:.2f}, {std:.2f})"
 
 
-def emit(name: str, rows: List[Dict], notes: str = "") -> Dict:
-    """Print a benchmark's table and persist its JSON artifact."""
+def emit(name: str, rows: List[Dict], notes: str = "",
+         stats: Dict = None) -> Dict:
+    """Print a benchmark's table and persist its JSON artifact.
+
+    ``stats`` is the machine-readable side channel: raw numeric summary
+    stats (typically ``Summary.stats()`` dicts keyed by row label) that
+    golden-file regression tests pin with relative tolerance — the
+    formatted ``rows`` stay free to change without breaking goldens.
+    """
     os.makedirs(OUT_DIR, exist_ok=True)
     print(f"\n=== {name} ===")
     if notes:
@@ -33,7 +40,7 @@ def emit(name: str, rows: List[Dict], notes: str = "") -> Dict:
         for r in rows:
             print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
     payload = {"name": name, "rows": rows, "notes": notes,
-               "time": time.time()}
+               "stats": stats or {}, "time": time.time()}
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1)
     return payload

@@ -42,7 +42,12 @@ def run() -> dict:
     sweep_s = time.perf_counter() - t0
     frontier_labels = {e.label for e in rep.frontier}
     rows = []
+    stats = {"derived": {"n_configs": float(len(rep.estimates)),
+                         "frontier_size": float(len(rep.frontier))}}
     for e in sorted(rep.estimates, key=lambda e: e.time_h):
+        stats[e.label] = {"time_h_mean": e.time_h, "cost_mean": e.cost_usd,
+                          "acc_mean": e.accuracy, "failure_p": e.failure_p,
+                          "speedup": e.speedup_vs_1k80}
         rows.append({
             "config": e.label,
             "time_h": f"{e.time_h:.2f}±{e.time_ci95:.2f}",
@@ -58,7 +63,7 @@ def run() -> dict:
              f"best under ${BUDGET} (fail_p<=0.10): "
              f"{rep.best.describe() if rep.best else 'none'}. "
              + _engine_speedup())
-    return emit("frontier", rows, notes)
+    return emit("frontier", rows, notes, stats=stats)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,128 @@
+"""Sim-to-training differential: the gym's trained runs vs the MC engine.
+
+Two panels:
+
+1. **Differential validation** (plan-only, many seeds): for each
+   (trace, fleet) pair the gym's wall-clock fleet model — an independent
+   implementation of the event semantics — is replayed over ``n_gym``
+   bootstrap seeds and compared against ``simulate_many(..., trace=...)``
+   on mean virtual steps, completed-mean billed cost, and completion
+   rate, under the tolerance contract in ``repro.gym.validate``.
+
+2. **Trained episodes** (real JAX training, reduced configs): one gym
+   episode per (trace, arch) executes the realized membership timeline
+   through the masked elastic runtime + async-PS simulator and reports
+   executed steps, eval accuracy, staleness — next to the engine's
+   prediction for the same fleet. The accuracy-vs-revocation-intensity
+   sweep reproduces the paper's Table IV / Fig 5 shape in real training.
+
+``--smoke`` (or GYM_REPLAY_SMOKE=1) shrinks the run for CI (<60 s).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from benchmarks.common import emit
+from repro.core.policy import PolicyDecision, StaticPolicy
+from repro.gym import (TransientGym, accuracy_intensity_sweep,
+                       check_monotone, differential_validate)
+from repro.traces.synth import default_trace_suite
+
+SEED = 0
+ARCHS = ("starcoder2-3b", "resnet32-cifar10")
+FLEETS = (PolicyDecision("K80", 4), PolicyDecision("P100", 2))
+
+
+def run(smoke: bool = False) -> dict:
+    smoke = smoke or os.environ.get("GYM_REPLAY_SMOKE", "") == "1"
+    n_gym, n_engine = (16, 256) if smoke else (48, 1024)
+    train_steps = 32 if smoke else 96
+    suite = default_trace_suite(SEED)[:2]        # calm + volatile
+    t0 = time.perf_counter()
+    rows = []
+    stats = {}
+    n_fail = 0
+
+    # --- panel 1: plan-only differential over many seeds ------------------
+    for trace in suite:
+        for dec in FLEETS:
+            rep = differential_validate(trace, dec, n_gym=n_gym,
+                                        n_engine=n_engine, seed=SEED)
+            fails = rep.failures()
+            n_fail += len(fails)
+            stats[f"{trace.name}/{dec.label}"] = {
+                "gym_steps": rep.gym_steps_mean,
+                "engine_steps": rep.engine_steps_mean,
+                "steps_rel_err": rep.steps_rel_err,
+                "gym_cost": rep.gym_cost_mean,
+                "engine_cost": rep.engine_cost_mean,
+                "cost_rel_err": rep.cost_rel_err,
+                "completion_gap": rep.completion_gap,
+            }
+            rows.append({
+                "panel": "differential",
+                "trace": trace.name, "fleet": dec.label, "arch": "-",
+                "steps": f"{rep.gym_steps_mean:.0f}/"
+                         f"{rep.engine_steps_mean:.0f}",
+                "cost_$": f"{rep.gym_cost_mean:.3f}/"
+                          f"{rep.engine_cost_mean:.3f}",
+                "rel_err": f"s{rep.steps_rel_err:.3f} "
+                           f"c{rep.cost_rel_err:.3f}",
+                "acc": "-", "verdict": "ok" if not fails else "; ".join(fails),
+            })
+
+    # --- panel 2: trained episodes (real JAX, reduced configs) ------------
+    for trace in (suite[:1] if smoke else suite):
+        for arch in ARCHS:
+            gym = TransientGym(trace, StaticPolicy(FLEETS[0]), refill=False,
+                               seed=SEED)
+            led = gym.run(arch=arch, train_steps=train_steps,
+                          async_updates=0 if smoke else 192)
+            rows.append({
+                "panel": "trained",
+                "trace": trace.name, "fleet": FLEETS[0].label, "arch": arch,
+                "steps": f"{led.executed_steps}/{train_steps}",
+                "cost_$": f"{led.cost_usd:.3f}",
+                "rel_err": "-",
+                "acc": f"{led.accuracy:.3f}",
+                "verdict": led.failure or "completed",
+            })
+            stats[f"trained/{trace.name}/{arch}"] = {
+                "executed_steps": float(led.executed_steps),
+                "accuracy": led.accuracy, "cost": led.cost_usd,
+                "mean_staleness": led.mean_staleness,
+            }
+
+    # --- panel 3: accuracy vs revocation intensity (Table IV shape) -------
+    factors = (1.0, 0.02) if smoke else (1.0, 0.02, 0.004)
+    sweep = accuracy_intensity_sweep(train_steps=train_steps, seed=SEED,
+                                     factors=factors)
+    violations = check_monotone(sweep)
+    for led in sweep:
+        rows.append({
+            "panel": "intensity", "trace": led.trace,
+            "fleet": FLEETS[0].label, "arch": "resnet32-cifar10",
+            "steps": f"{led.executed_steps}/{train_steps}",
+            "cost_$": f"{led.cost_usd:.3f}", "rel_err": "-",
+            "acc": f"{led.accuracy:.3f}",
+            "verdict": led.failure or "completed",
+        })
+        stats[f"intensity/{led.trace}"] = {
+            "executed_steps": float(led.executed_steps),
+            "accuracy": led.accuracy, "revocations": float(led.revocations),
+        }
+
+    elapsed = time.perf_counter() - t0
+    notes = (f"{len(suite)} traces x {len(FLEETS)} fleets differential "
+             f"({n_gym} gym seeds vs {n_engine} engine trials) + "
+             f"{len(suite)}x{len(ARCHS)} trained episodes + "
+             f"{len(factors)}-level intensity sweep in {elapsed:.1f}s; "
+             f"tolerance violations: {n_fail}; accuracy monotonicity "
+             f"violations: {violations or 'none'}")
+    return emit("gym_replay", rows, notes, stats=stats)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -12,8 +12,8 @@ import sys
 import time
 
 from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
-                        fig8_geo_distributed, frontier, policy_replay,
-                        roofline_report, selective_revocation,
+                        fig8_geo_distributed, frontier, gym_replay,
+                        policy_replay, roofline_report, selective_revocation,
                         staleness_accuracy, table1_transient_vs_ondemand,
                         table3_scale_up_vs_out, table4_revocation_overhead,
                         table5_ondemand_comparison)
@@ -27,6 +27,7 @@ MODULES = {
     "fig6": fig6_ps_bottleneck,
     "fig8": fig8_geo_distributed,
     "frontier": frontier,
+    "gym": gym_replay,
     "policy": policy_replay,
     "staleness": staleness_accuracy,
     "selective": selective_revocation,

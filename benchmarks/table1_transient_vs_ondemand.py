@@ -41,6 +41,8 @@ def run() -> dict:
                         n_runs=10, seed=2)
     od4 = simulate_many(ClusterSpec.homogeneous("K80", 4, transient=False),
                         n_runs=10, seed=3)
+    stats = {"4 K80 transient": tr.stats(), "1 K80 on-demand": od1.stats(),
+             "4 K80 on-demand": od4.stats()}
     row("4 K80 transient", tr.time_h, tr.cost, tr.acc, tr.n_completed)
     row("1 K80 on-demand", od1.time_h, od1.cost, od1.acc, od1.n_completed)
     row("4 K80 on-demand", od4.time_h, od4.cost, od4.acc, od4.n_completed)
@@ -50,6 +52,10 @@ def run() -> dict:
             st = tr.by_r[r]
             row(f"r = {r} ({n_r} of {N_TRIALS})",
                 st["time_h"], st["cost"], st["acc"], n_r, paper_key=key)
+            stats[key] = {"n": float(n_r),
+                          "time_h_mean": st["time_h"][0],
+                          "cost_mean": st["cost"][0],
+                          "acc_mean": st["acc"][0]}
 
     speedup = od1.time_h[0] / tr.time_h[0]
     savings = 1.0 - tr.cost[0] / od1.cost[0]
@@ -61,7 +67,9 @@ def run() -> dict:
              f"revocations: {total_rev} across {N_TRIALS} clusters = "
              f"{total_rev * 32 / N_TRIALS:.1f} per 32 clusters "
              f"(paper: 13 in 32 clusters / 128 workers)")
-    return emit("table1_transient_vs_ondemand", rows, notes)
+    stats["derived"] = {"speedup": speedup, "savings": savings,
+                        "total_revocations": float(total_rev)}
+    return emit("table1_transient_vs_ondemand", rows, notes, stats=stats)
 
 
 if __name__ == "__main__":

@@ -25,8 +25,10 @@ def run() -> dict:
                ("8 K80", ClusterSpec.homogeneous("K80", 8, transient=True)),
                ("1 P100", ClusterSpec.homogeneous("P100", 1, transient=True)),
                ("1 V100", ClusterSpec.homogeneous("V100", 1, transient=True))]
+    stats = {}
     for i, (label, spec) in enumerate(configs):
         s = simulate_many(spec, n_runs=N_TRIALS, seed=30 + i)
+        stats[label] = s.stats()
         p = PAPER[label]
         rows.append({
             "config": label,
@@ -46,7 +48,7 @@ def run() -> dict:
              f"balanced choice (§III-C); planner agrees once failure "
              f"probability is capped: "
              f"{plan_within_budget(2.83, max_workers=8, max_failure_p=0.1)[0].config.describe()}")
-    return emit("table3_scale_up_vs_out", rows, notes)
+    return emit("table3_scale_up_vs_out", rows, notes, stats=stats)
 
 
 if __name__ == "__main__":

@@ -140,8 +140,12 @@ def _sample_lifetimes(kind: str, n: int, rng: np.random.Generator) -> np.ndarray
 def _masked_mean_std(x: np.ndarray, m: np.ndarray) -> Tuple[float, float]:
     """Mean/std over the masked selection; (0, 0) when nothing is selected
     — degenerate aggregates must stay finite and warning-free (consumers
-    gate on ``n_completed``, not on NaN sentinels)."""
+    gate on ``n_completed``, not on NaN sentinels). NaN entries inside the
+    selection are skipped for the same reason: engine trials never produce
+    them, but gym ledgers may mix measured accuracies with plan-only NaN
+    placeholders, and one placeholder must not poison the aggregate."""
     sel = x[m]
+    sel = sel[~np.isnan(sel)]
     if sel.size == 0:
         return (0.0, 0.0)
     return (float(sel.mean()), float(sel.std()))
@@ -174,31 +178,50 @@ class _LazyResults:
         return repr(self._force())
 
 
-def summarize_batch(batch: MCBatch):
-    """Vectorized counterpart of ``simulator.summarize`` — same ``Summary``
-    values, computed on the trial-axis arrays instead of per-run objects."""
+def summarize_arrays(status: np.ndarray, time_h: np.ndarray,
+                     cost_usd: np.ndarray, accuracy: np.ndarray,
+                     revocations: np.ndarray, *, results=None):
+    """Aggregate trial-axis outcome arrays into a ``simulator.Summary``.
+
+    The one schema seam shared by every producer of per-trial outcomes:
+    ``summarize_batch`` (the engine) and ``gym.GymLedger`` (real training
+    replays) both call this, so their reports are field-for-field
+    comparable — which is what the differential validator relies on.
+    ``status`` uses this module's codes (COMPLETED, ...).
+    """
     from repro.core.simulator import Summary   # late: simulator imports mc
-    done = batch.completed
+    status = np.asarray(status)
+    n = int(status.shape[0])
+    done = status == COMPLETED
     n_done = int(done.sum())
-    rs, counts = np.unique(batch.revocations[done], return_counts=True)
+    revocations = np.asarray(revocations)
+    rs, counts = np.unique(revocations[done], return_counts=True)
     rev_counts = {int(r): int(c) for r, c in zip(rs, counts)}
     by_r = {}
     for r in rev_counts:
-        sel = done & (batch.revocations == r)
-        by_r[r] = {"time_h": _masked_mean_std(batch.time_h, sel),
-                   "cost": _masked_mean_std(batch.cost_usd, sel),
-                   "acc": _masked_mean_std(batch.accuracy, sel)}
+        sel = done & (revocations == r)
+        by_r[r] = {"time_h": _masked_mean_std(time_h, sel),
+                   "cost": _masked_mean_std(cost_usd, sel),
+                   "acc": _masked_mean_std(accuracy, sel)}
     return Summary(
-        n_runs=batch.n_trials,
+        n_runs=n,
         n_completed=n_done,
-        failure_rate=1.0 - n_done / batch.n_trials if batch.n_trials else 0.0,
+        failure_rate=1.0 - n_done / n if n else 0.0,
         revocation_counts=rev_counts,
-        time_h=_masked_mean_std(batch.time_h, done),
-        cost=_masked_mean_std(batch.cost_usd, done),
-        acc=_masked_mean_std(batch.accuracy, done),
+        time_h=_masked_mean_std(time_h, done),
+        cost=_masked_mean_std(cost_usd, done),
+        acc=_masked_mean_std(accuracy, done),
         by_r=by_r,
-        results=_LazyResults(batch),
+        results=[] if results is None else results,
     )
+
+
+def summarize_batch(batch: MCBatch):
+    """Vectorized counterpart of ``simulator.summarize`` — same ``Summary``
+    values, computed on the trial-axis arrays instead of per-run objects."""
+    return summarize_arrays(batch.status, batch.time_h, batch.cost_usd,
+                            batch.accuracy, batch.revocations,
+                            results=_LazyResults(batch))
 
 
 def simulate_batch(spec: ClusterSpec, n_trials: int,

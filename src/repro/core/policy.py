@@ -88,19 +88,55 @@ class PolicyObservation:
 
 class Policy:
     """Interface: ``decide`` is called once per epoch, decisions are
-    shared across trials (the observation aggregates per-trial state)."""
+    shared across trials (the observation aggregates per-trial state).
+
+    ``act`` is the *online* entry point: it owns the incumbent-decision
+    bookkeeping (fills ``obs.current``, appends kind/fleet changes to
+    ``decision_log``) so any driver — the vectorized ``evaluate_policy``
+    harness and the trace-driven training gym alike — replans a fleet
+    with one call per epoch instead of re-implementing the plumbing.
+    ``decide`` stays the pure strategy hook subclasses override.
+    """
     name = "policy"
 
+    def __init__(self):
+        self._incumbent: Optional[PolicyDecision] = None
+        self.decision_log: List[Tuple[float, PolicyDecision]] = []
+
     def reset(self, rng: np.random.Generator) -> None:
-        pass
+        """Clear online state; called once per evaluation/episode."""
+        self._incumbent = None
+        self.decision_log = []
 
     def decide(self, obs: PolicyObservation,
                ctx: ReplayContext) -> PolicyDecision:
         raise NotImplementedError
 
+    def act(self, obs: PolicyObservation,
+            ctx: ReplayContext) -> PolicyDecision:
+        """One online replanning step: observe -> decide -> record.
+
+        If the driver did not track an incumbent (``obs.current`` is
+        None), the policy's own is substituted so hysteresis works; the
+        returned decision becomes the new incumbent either way.
+        """
+        if obs.current is None and self._incumbent is not None:
+            obs = dataclasses.replace(obs, current=self._incumbent)
+        dec = self.decide(obs, ctx)
+        if self._incumbent is None or dec != self._incumbent:
+            self.decision_log.append((obs.t_s, dec))
+        self._incumbent = dec
+        return dec
+
+    @property
+    def switches(self) -> int:
+        """Decision *changes* recorded since the last ``reset``."""
+        return max(len(self.decision_log) - 1, 0)
+
 
 class StaticPolicy(Policy):
     def __init__(self, decision: PolicyDecision):
+        super().__init__()
         self.name = f"static({decision.label})"
         self.decision = decision
 
@@ -120,6 +156,7 @@ class GreedyCheapest(Policy):
     def __init__(self, n_workers: int = 4, n_ps: int = 1,
                  kinds: Sequence[str] = ("K80", "P100", "V100"),
                  switch_margin: float = 0.15):
+        super().__init__()
         self.name = f"greedy({n_workers}w)"
         self.n_workers, self.n_ps = n_workers, n_ps
         self.kinds = tuple(kinds)
@@ -154,6 +191,7 @@ class LookaheadMC(Policy):
     def __init__(self, candidates: Optional[Sequence[PolicyDecision]] = None,
                  n_plan_trials: int = 48, switch_margin: float = 0.08,
                  failure_penalty_usd: float = 10.0, seed: int = 0):
+        super().__init__()
         self.name = "lookahead-mc"
         self.candidates = tuple(candidates) if candidates else tuple(
             PolicyDecision(kind, n)
@@ -165,6 +203,7 @@ class LookaheadMC(Policy):
         self._rng = np.random.default_rng(seed)
 
     def reset(self, rng):
+        super().reset(rng)
         self._rng = np.random.default_rng(self._seed)
 
     def _score(self, dec: PolicyDecision, remaining_steps: int,
@@ -205,6 +244,7 @@ class OraclePolicy(Policy):
     """
 
     def __init__(self, candidates: Optional[Sequence[PolicyDecision]] = None):
+        super().__init__()
         self.name = "oracle"
         self.candidates = tuple(candidates) if candidates else tuple(
             PolicyDecision(kind, n)
@@ -212,6 +252,29 @@ class OraclePolicy(Policy):
 
     def decide(self, obs, ctx):   # pragma: no cover - evaluator special-cases
         raise RuntimeError("OraclePolicy is evaluated offline, not stepped")
+
+
+def make_observation(ctx: ReplayContext, *, t_s: float, steps_done: float,
+                     total_steps: int, frac_running: float = 1.0,
+                     current: Optional[PolicyDecision] = None
+                     ) -> PolicyObservation:
+    """Assemble the current-conditions-only observation from a context.
+
+    Shared by ``evaluate_policy`` and the training gym so both drivers
+    show policies exactly the same market view: the spot quote per kind
+    at ``t_s`` and the trailing-hour revocation intensity — never the
+    future of the trace.
+    """
+    return PolicyObservation(
+        t_s=t_s,
+        steps_done=steps_done,
+        total_steps=total_steps,
+        frac_running=frac_running,
+        prices_hr={kd: float(ctx.price_at(kd, t_s))
+                   for kd in pricing.SERVER_TYPES},
+        revocations_per_hr={kd: ctx.revocation_intensity(kd, t_s)
+                            for kd in ("K80", "P100", "V100")},
+        current=current)
 
 
 # ---------------------------------------------------------------------------
@@ -309,7 +372,6 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
         release_t = np.concatenate([release_t, np.full((N, n_new), np.inf)],
                                    axis=1)
 
-    decisions: List[Tuple[float, PolicyDecision]] = []
     current = None
     total = float(total_steps)
     k = 0
@@ -319,20 +381,13 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
         if not running.any():
             break
 
-        # --- observe + decide (shared across trials) --------------------
-        obs = PolicyObservation(
-            t_s=t_epoch,
-            steps_done=float(steps[running].mean()),
-            total_steps=total_steps,
-            frac_running=float(running.mean()),
-            prices_hr={kd: float(ctx.price_at(kd, t_epoch))
-                       for kd in pricing.SERVER_TYPES},
-            revocations_per_hr={kd: ctx.revocation_intensity(kd, t_epoch)
-                                for kd in ("K80", "P100", "V100")},
-            current=current)
-        dec = policy.decide(obs, ctx)
-        if current is None or dec != current:
-            decisions.append((t_epoch, dec))
+        # --- observe + act (decision shared across trials) ---------------
+        obs = make_observation(ctx, t_s=t_epoch,
+                               steps_done=float(steps[running].mean()),
+                               total_steps=total_steps,
+                               frac_running=float(running.mean()),
+                               current=current)
+        dec = policy.act(obs, ctx)
         current = dec
 
         # --- reconcile the fleet to the decision ------------------------
@@ -465,8 +520,8 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
                          n_trials=N, completed=done,
                          time_h=t_final / 3600.0, cost_usd=cost,
                          accuracy=acc,
-                         switches=max(len(decisions) - 1, 0),
-                         decisions=tuple(decisions))
+                         switches=policy.switches,
+                         decisions=tuple(policy.decision_log))
 
 
 def _oracle_envelope(policy: OraclePolicy, ctx: ReplayContext, *,

@@ -292,6 +292,58 @@ class Summary:
         _, std = getattr(self, key)
         return ci95_halfwidth(std, self.n_completed)
 
+    # -- schema seam (shared with gym ledgers and benchmark goldens) --------
+
+    def to_dict(self) -> Dict:
+        """JSON-safe aggregate view (drops the per-run ``results``).
+
+        This is THE reporting schema: the batched engine, the legacy loop,
+        and the gym ledger all aggregate into it, so benchmarks and golden
+        tests consume one shape instead of hand-rolled dict keys. Pinned
+        lossless (modulo ``results``) by a round-trip test.
+        """
+        return {
+            "n_runs": self.n_runs,
+            "n_completed": self.n_completed,
+            "failure_rate": self.failure_rate,
+            "revocation_counts": {str(k): v
+                                  for k, v in self.revocation_counts.items()},
+            "time_h": list(self.time_h),
+            "cost": list(self.cost),
+            "acc": list(self.acc),
+            "by_r": {str(r): {k: list(v) for k, v in d.items()}
+                     for r, d in self.by_r.items()},
+        }
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Summary":
+        """Inverse of ``to_dict``; ``results`` comes back empty."""
+        return Summary(
+            n_runs=int(d["n_runs"]),
+            n_completed=int(d["n_completed"]),
+            failure_rate=float(d["failure_rate"]),
+            revocation_counts={int(k): int(v)
+                               for k, v in d["revocation_counts"].items()},
+            time_h=tuple(d["time_h"]),
+            cost=tuple(d["cost"]),
+            acc=tuple(d["acc"]),
+            by_r={int(r): {k: tuple(v) for k, v in dd.items()}
+                  for r, dd in d["by_r"].items()},
+            results=[],
+        )
+
+    def stats(self) -> Dict[str, float]:
+        """Flat numeric stats for golden files: means, stds, CIs, counts."""
+        out = {"n_runs": float(self.n_runs),
+               "n_completed": float(self.n_completed),
+               "failure_rate": self.failure_rate}
+        for key in ("time_h", "cost", "acc"):
+            mean, std = getattr(self, key)
+            out[f"{key}_mean"] = mean
+            out[f"{key}_std"] = std
+            out[f"{key}_ci95"] = self.ci95(key)
+        return out
+
 
 def ci95_halfwidth(std: float, n: int) -> float:
     """Shared CI convention for every aggregate in the repo (engine

@@ -72,6 +72,15 @@ class AsyncResult:
     def mean_staleness(self) -> float:
         return float(self.staleness.mean()) if len(self.staleness) else 0.0
 
+    def staleness_histogram(self) -> Dict[int, int]:
+        """``{staleness -> push count}`` over every applied push — the
+        distribution the paper's accuracy-vs-workers mechanism rides on
+        (gym ledgers report it per episode)."""
+        if not len(self.staleness):
+            return {}
+        vals, counts = np.unique(self.staleness, return_counts=True)
+        return {int(v): int(c) for v, c in zip(vals, counts)}
+
 
 class AsyncPSSimulator:
     """Event-ordered async-PS training of a real JAX model."""

@@ -145,12 +145,22 @@ class Cifar10Like:
     image_size: int = 32
     signal: float = 3.0          # strong planted margin: linear models reach
     seed: int = 0                # ~90%+, leaving headroom to SEE staleness
+    # per-class channel-mean (color) shift: a random pixel-space direction
+    # has ~zero spatial mean, so global-average-pool architectures (the
+    # resnet family) never see it — the color component survives pooling.
+    # 0.0 keeps the task bit-identical for existing linear-model consumers.
+    color_signal: float = 0.0
 
     def _dirs(self) -> np.ndarray:
         rng = np.random.default_rng(self.seed + 1234)
         d = rng.normal(size=(self.num_classes,
                              self.image_size * self.image_size * 3))
         return (d / np.linalg.norm(d, axis=1, keepdims=True)).astype(np.float32)
+
+    def _colors(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 4321)
+        c = rng.normal(size=(self.num_classes, 3))
+        return (c / np.linalg.norm(c, axis=1, keepdims=True)).astype(np.float32)
 
     def batch(self, step: int, batch: int, *, shard: int = 0,
               num_shards: int = 1) -> Dict[str, jnp.ndarray]:
@@ -160,6 +170,8 @@ class Cifar10Like:
                        ).astype(np.float32)
         x = x + self.signal * self._dirs()[y]
         x = x.reshape(batch, self.image_size, self.image_size, 3)
+        if self.color_signal:
+            x = x + self.color_signal * self._colors()[y][:, None, None, :]
         return {"images": jnp.asarray(x), "labels": jnp.asarray(y, jnp.int32)}
 
     def eval_batch(self, batch: int = 512) -> Dict[str, jnp.ndarray]:

@@ -58,6 +58,44 @@ def build_trace(args, rng: np.random.Generator):
     return events
 
 
+def run_gym(args) -> None:
+    """The ``--gym --trace ...`` path: replay a market trace end-to-end.
+
+    A ``TransientGym`` plans the fleet against the trace (with the chosen
+    online policy replanning at decision epochs), then trains the
+    realized membership timeline with the masked elastic runtime and
+    reports the ledger — the same schema the MC engine summarizes to,
+    which is what ``gym/validate.py`` pins the two against.
+    """
+    from repro.core.policy import (GreedyCheapest, LookaheadMC,
+                                   PolicyDecision, StaticPolicy)
+    from repro.gym import TransientGym
+    from repro.traces import load_trace
+
+    trace = load_trace(args.trace, seed=args.seed)
+    if args.policy == "static":
+        policy = StaticPolicy(PolicyDecision(args.server_kind,
+                                             args.initial_workers))
+    elif args.policy == "greedy":
+        policy = GreedyCheapest(n_workers=args.initial_workers)
+    else:
+        policy = LookaheadMC(seed=args.seed)
+    gym = TransientGym(trace, policy, total_steps=args.gym_total_steps,
+                       epoch_s=args.gym_epoch_s, refill=args.policy != "static",
+                       seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    t0 = time.monotonic()
+    ledger = gym.run(arch=args.arch, train_steps=args.steps,
+                     seq_len=args.seq_len,
+                     async_updates=args.gym_async_updates, ckpt=ckpt)
+    out = ledger.to_dict()
+    out["wall_s"] = round(time.monotonic() - t0, 2)
+    del out["epochs"], out["schedule"]          # keep stdout scannable
+    out["n_epochs"] = len(ledger.epochs)
+    out["n_events"] = len(ledger.schedule)
+    print(json.dumps(out, indent=1))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="starcoder2-3b", choices=list_archs())
@@ -86,7 +124,26 @@ def main() -> None:
     ap.add_argument("--naive-lr", action="store_true",
                     help="disable adaptive LR (paper's TF default)")
     ap.add_argument("--seed", type=int, default=0)
+    # gym: trace-driven end-to-end replay (market trace -> real training)
+    ap.add_argument("--gym", action="store_true",
+                    help="replay a market trace through the training gym")
+    ap.add_argument("--trace", default="calm",
+                    help="trace file (.jsonl/.npz) or synthetic name "
+                         "(calm|volatile|bursty)")
+    ap.add_argument("--policy", default="static",
+                    choices=["static", "greedy", "lookahead"])
+    ap.add_argument("--gym-total-steps", type=int, default=64_000,
+                    help="virtual workload the trace replay simulates "
+                         "(--steps real steps are trained against it)")
+    ap.add_argument("--gym-epoch-s", type=float, default=1800.0)
+    ap.add_argument("--gym-async-updates", type=int, default=0,
+                    help=">0: also replay through the async-PS simulator "
+                         "for the staleness histogram")
     args = ap.parse_args()
+
+    if args.gym:
+        run_gym(args)
+        return
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)

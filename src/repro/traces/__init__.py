@@ -24,3 +24,21 @@ from repro.traces.schema import (EVENT_KINDS, Trace,  # noqa: F401
 from repro.traces.synth import (default_trace_suite,  # noqa: F401
                                 synthetic_trace, trace_from_model)
 from repro.traces.replay import ReplayContext  # noqa: F401
+
+
+def load_trace(spec: str, seed: int = 0) -> Trace:
+    """Resolve a CLI trace argument: a file path or a synthetic name.
+
+    ``*.jsonl`` / ``*.npz`` load the recorded file; ``calm`` /
+    ``volatile`` / ``bursty`` name the deterministic synthetic suite
+    (``synth.default_trace_suite``).
+    """
+    if spec.endswith(".jsonl"):
+        return Trace.from_jsonl(spec)
+    if spec.endswith(".npz"):
+        return Trace.from_npz(spec)
+    suite = {t.name: t for t in default_trace_suite(seed)}
+    if spec in suite:
+        return suite[spec]
+    raise ValueError(f"unknown trace {spec!r}: expected a .jsonl/.npz path "
+                     f"or one of {sorted(suite)}")

@@ -31,6 +31,19 @@ from repro.train.step import TrainState, init_state, make_train_step
 PyTree = Any
 
 
+def evaluate_accuracy(model: Model, params: PyTree,
+                      batch: Dict[str, jax.Array]) -> float:
+    """Held-out top-1 accuracy of ``params`` on one eval batch.
+
+    Classification accuracy for the resnet family, next-token accuracy
+    for sequence families — the gym's eval metric and the quantity the
+    sim-vs-train monotonicity contract is stated over.
+    """
+    logits, _aux = model.apply(params, batch)
+    pred = jnp.argmax(logits, axis=-1)
+    return float((pred == batch["labels"]).mean())
+
+
 @dataclasses.dataclass
 class Trainer:
     model: Model

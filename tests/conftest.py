@@ -4,3 +4,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# benchmarks/ is imported by the golden-file tests; make it importable no
+# matter which directory pytest was launched from
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/*.json from current benchmark stats "
+             "(see tests/test_goldens.py)")

@@ -1,0 +1,72 @@
+"""Golden-file regression tests for benchmark summary stats.
+
+Every simulator benchmark emits a machine-readable ``stats`` side
+channel next to its formatted table (``benchmarks.common.emit(...,
+stats=...)``): raw means/stds/CIs under fixed seeds. These are pinned
+here against committed JSON goldens with relative tolerance, so any
+change to the engine's event semantics, billing, or calibration shows up
+as a diff instead of silently shifting the paper tables.
+
+To regenerate after an INTENTIONAL change (inspect the diff before
+committing!):
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+
+The seeds are fixed and the arithmetic is pure NumPy, so runs are
+deterministic on one platform; ``RTOL`` absorbs cross-platform
+float/BLAS drift without masking real semantic changes.
+"""
+import importlib
+import json
+import math
+import os
+
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+RTOL = 1e-3
+ABS_TOL = 1e-9
+
+MODULES = {
+    "table1_transient_vs_ondemand": "benchmarks.table1_transient_vs_ondemand",
+    "table3_scale_up_vs_out": "benchmarks.table3_scale_up_vs_out",
+    "table4_revocation_overhead": "benchmarks.table4_revocation_overhead",
+    "table5_ondemand_comparison": "benchmarks.table5_ondemand_comparison",
+    "frontier": "benchmarks.frontier",
+}
+
+
+def _assert_close(got, want, path=""):
+    assert set(got) == set(want), (
+        f"{path}: key set changed: +{sorted(set(got) - set(want))} "
+        f"-{sorted(set(want) - set(got))}")
+    for k, w in want.items():
+        g = got[k]
+        where = f"{path}/{k}"
+        if isinstance(w, dict):
+            _assert_close(g, w, where)
+        else:
+            both_nan = isinstance(g, float) and isinstance(w, float) \
+                and math.isnan(g) and math.isnan(w)
+            assert both_nan or math.isclose(g, w, rel_tol=RTOL,
+                                            abs_tol=ABS_TOL), \
+                f"{where}: {g!r} != golden {w!r} (rtol {RTOL})"
+
+
+@pytest.mark.parametrize("name", sorted(MODULES))
+def test_benchmark_stats_match_golden(name, request):
+    mod = importlib.import_module(MODULES[name])
+    payload = mod.run()
+    stats = payload["stats"]
+    assert stats, f"{name} emitted no stats side channel"
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if request.config.getoption("--update-goldens"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(stats, f, indent=1, sort_keys=True)
+        pytest.skip(f"golden rewritten: {path}")
+    assert os.path.exists(path), \
+        f"missing golden {path}; generate with --update-goldens"
+    with open(path) as f:
+        golden = json.load(f)
+    _assert_close(stats, golden)

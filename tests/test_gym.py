@@ -1,0 +1,223 @@
+"""Sim-to-training differential validation (the gym acceptance contract).
+
+The tolerance contract lives in ``repro.gym.validate.TOLERANCE``; these
+tests assert it on >=2 synthetic traces and >=2 reduced architectures:
+gym-trained step counts and billed cost agree with
+``simulate_many(..., trace=...)`` predictions within tolerance, and eval
+accuracy is monotonically non-increasing with revocation intensity
+(the paper's Table IV / Fig 5 shape, reproduced in real JAX training).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import mc
+from repro.core.policy import GreedyCheapest, PolicyDecision, StaticPolicy
+from repro.core.simulator import ClusterSpec, Summary, simulate_many
+from repro.gym import (TOLERANCE, TransientGym, accuracy_intensity_sweep,
+                       check_monotone, differential_validate,
+                       summarize_ledgers, training_schedule)
+from repro.gym.validate import intensity_sweep_traces
+from repro.traces.replay import ReplayContext
+from repro.traces.synth import default_trace_suite
+
+SUITE = default_trace_suite(0)
+CALM, VOLATILE = SUITE[0], SUITE[1]
+FLEET = PolicyDecision("K80", 4)
+ARCHS = ("starcoder2-3b", "resnet32-cifar10")
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 wall-clock model (no JAX)
+# ---------------------------------------------------------------------------
+
+def test_plan_static_calm_completes():
+    led = TransientGym(CALM, StaticPolicy(FLEET), seed=0).plan()
+    assert led.completed and led.failure is None
+    assert led.vsteps_done == led.total_steps
+    assert 0.8 < led.time_h < 4.0
+    assert 0.5 < led.cost_usd < 2.5            # Table I economics ballpark
+    assert led.max_slots == 4
+    # per-epoch ledger: time and virtual steps advance monotonically
+    assert [e.epoch for e in led.epochs] == list(range(len(led.epochs)))
+    vs = [e.vsteps for e in led.epochs]
+    assert vs == sorted(vs)
+    assert all(e.cost_usd >= 0 and e.spot_price_hr > 0 for e in led.epochs)
+
+
+def test_plan_deterministic():
+    a = TransientGym(CALM, StaticPolicy(FLEET), seed=3).plan()
+    b = TransientGym(CALM, StaticPolicy(FLEET), seed=3).plan()
+    assert a.cost_usd == b.cost_usd and a.time_h == b.time_h
+    assert a.schedule == b.schedule
+
+
+def test_differential_tolerance_contract():
+    """The documented contract on >=2 traces x >=2 fleets (plan side)."""
+    for trace in (CALM, VOLATILE):
+        for dec in (PolicyDecision("K80", 4), PolicyDecision("P100", 2)):
+            rep = differential_validate(trace, dec, n_gym=32, n_engine=512,
+                                        seed=0)
+            assert rep.ok(), f"{trace.name}/{dec.label}: {rep.failures()}"
+
+
+def test_differential_tracks_heavy_revocation():
+    """Under a revocation storm both implementations truncate the run the
+    same way (steps agree even though nothing completes)."""
+    storm = intensity_sweep_traces(0)[2]
+    rep = differential_validate(storm, FLEET, n_gym=32, n_engine=512, seed=0)
+    assert rep.engine_completion < 0.5          # the storm actually bites
+    assert rep.steps_rel_err <= TOLERANCE["steps_rel"], rep.failures()
+    assert rep.completion_gap <= TOLERANCE["completion_abs"]
+
+
+def test_ledger_summary_schema_roundtrip():
+    """Gym ledgers and engine runs aggregate into ONE Summary schema and
+    the schema survives a JSON round-trip (the seam satellite)."""
+    led = TransientGym(CALM, StaticPolicy(FLEET), seed=0).plan()
+    gym_sum = led.summary()
+    eng_sum = simulate_many(ClusterSpec.homogeneous("K80", 4), n_runs=64,
+                            seed=0, trace=ReplayContext(CALM,
+                                                        bootstrap="zero"))
+    assert set(gym_sum.to_dict()) == set(eng_sum.to_dict())
+    for s in (gym_sum, eng_sum):
+        back = Summary.from_dict(json.loads(json.dumps(s.to_dict())))
+        # compare as JSON text: NaN sentinels (accuracy of plan-only or
+        # failed trials) must survive but nan != nan under dict equality
+        assert json.dumps(back.to_dict(), sort_keys=True) \
+            == json.dumps(s.to_dict(), sort_keys=True)
+        assert set(back.stats()) == set(s.stats())
+
+
+def test_schedule_replays_through_sparse_cluster():
+    """Membership schedules are always executable: joins only fill
+    empty/revoked slots, revocations only hit active ones, the cluster is
+    never empty at an executed step — across policies, traces, seeds."""
+    from repro.core.cluster import SparseCluster
+    cases = [(CALM, StaticPolicy(FLEET), False),
+             (SUITE[2], GreedyCheapest(n_workers=4), True),
+             (intensity_sweep_traces(0)[1], StaticPolicy(FLEET), False)]
+    for trace, policy, refill in cases:
+        for seed in range(4):
+            led = TransientGym(trace, policy, refill=refill,
+                               seed=seed).plan()
+            sched = training_schedule(led, 64)
+            assert 0 <= len(sched.initial) <= led.max_slots
+            cluster = SparseCluster(max_slots=led.max_slots)
+            for slot, kind in sched.initial:
+                cluster.fill_and_activate(slot, 0, kind=kind)
+            by_step = {}
+            for ev in sched.events:
+                assert 0 <= ev.slot < led.max_slots
+                assert 0 <= ev.step < max(sched.executed_steps, 1)
+                by_step.setdefault(ev.step, []).append(ev)
+            for step in range(sched.executed_steps):
+                for ev in by_step.get(step, ()):   # insertion order, like
+                    if ev.kind == "revoke":        # ElasticRuntime applies
+                        cluster.revoke(ev.slot, step)
+                    elif ev.kind == "join":
+                        cluster.fill_and_activate(ev.slot, step,
+                                                  kind=ev.server_kind)
+                assert cluster.n_active >= 1, (trace.name, seed, step)
+
+
+def test_gym_status_codes_are_engine_codes():
+    storm = intensity_sweep_traces(0)[2]
+    led = TransientGym(storm, StaticPolicy(FLEET), seed=0).plan()
+    assert led.status in (mc.COMPLETED, mc.ALL_REVOKED, mc.NO_PROGRESS)
+    assert not led.completed and led.failure in ("all_revoked", "no_progress")
+    assert led.vsteps_done < led.total_steps
+
+
+# ---------------------------------------------------------------------------
+# Phase-2: real training (reduced configs; the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_by_trace():
+    """Engine predictions per trace, shared across the agreement tests."""
+    out = {}
+    for trace in (CALM, VOLATILE):
+        ctx = ReplayContext(trace, bootstrap="zero")
+        spec = ClusterSpec.homogeneous(FLEET.kind, FLEET.n_workers,
+                                       transient=True, n_ps=FLEET.n_ps,
+                                       master_failover=True)
+        s = simulate_many(spec, n_runs=512, seed=10_000, trace=ctx)
+        steps = float(np.mean([r.steps_done for r in s.results]))
+        out[trace.name] = (s, steps)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("trace_name", ["calm", "volatile"])
+def test_trained_agreement_with_engine(arch, trace_name, engine_by_trace):
+    """ISSUE acceptance: gym-TRAINED step counts and billed cost agree
+    with simulate_many(..., trace=...) within the documented tolerance,
+    on 2 traces x 2 reduced archs."""
+    trace = {t.name: t for t in SUITE}[trace_name]
+    gym = TransientGym(trace, StaticPolicy(FLEET), refill=False, seed=0)
+    led = gym.run(arch=arch, train_steps=16, seq_len=16)
+    summary, engine_steps = engine_by_trace[trace_name]
+
+    # trained step count, rescaled to the virtual workload
+    trained_vsteps = led.executed_steps / 16 * led.total_steps
+    assert abs(trained_vsteps - engine_steps) / engine_steps \
+        <= TOLERANCE["steps_rel"]
+    # billed cost of the realized timeline vs the engine's completed mean
+    assert abs(led.cost_usd - summary.cost[0]) / summary.cost[0] \
+        <= TOLERANCE["cost_rel"]
+    # the run really trained: finite loss, eval accuracy measured
+    assert np.isfinite(led.final_loss)
+    assert 0.0 <= led.accuracy <= 1.0
+
+
+def test_accuracy_monotone_in_revocation_intensity():
+    """ISSUE acceptance: eval accuracy is monotonically non-increasing as
+    revocation intensity grows (executed steps shrink with it)."""
+    ledgers = accuracy_intensity_sweep(train_steps=64, seed=0)
+    steps = [l.executed_steps for l in ledgers]
+    accs = [l.accuracy for l in ledgers]
+    assert steps == sorted(steps, reverse=True)
+    assert steps[0] > steps[-1]                # the sweep actually bites
+    assert check_monotone(ledgers) == []
+    # the calm end must have genuinely learned; the storm end must not
+    assert accs[0] > 0.5 and accs[-1] < 0.3
+
+
+def test_revocation_warning_triggers_fast_save(tmp_path):
+    """The GCE 30-s warning path: a revocation inside the executed window
+    fast-saves a restorable checkpoint (warn -> revoke -> mask update)."""
+    from repro.core.checkpoint import CheckpointManager
+    trace = intensity_sweep_traces(0)[1]
+    ck = CheckpointManager(str(tmp_path))
+    gym = TransientGym(trace, StaticPolicy(FLEET), seed=0)
+    led = gym.run(arch="resnet32-cifar10", train_steps=32, ckpt=ck)
+    assert led.revocations >= 1
+    assert led.fast_saves >= 1
+    got = ck.restore_latest()
+    assert got is not None and got[2].get("reason") == "revocation_warning"
+
+
+def test_async_ps_staleness_histogram():
+    """The same timeline through the async-PS simulator: the histogram
+    covers every applied push and multi-worker fleets are actually stale."""
+    from repro.gym import execute_async_ps
+    led = TransientGym(CALM, StaticPolicy(FLEET), seed=0).plan()
+    execute_async_ps(led, updates=160, seed=0)
+    assert sum(led.staleness_hist.values()) == 160
+    assert led.mean_staleness > 0.5            # 4 async workers -> staleness
+    # plain-int keys/values (not numpy scalars): the histogram must be
+    # JSON-serializable as-is for the ledger's to_dict artifact
+    assert all(type(k) is int and type(v) is int
+               for k, v in led.staleness_hist.items())
+
+
+def test_summarize_ledgers_matches_engine_schema_fields():
+    ledgers = [TransientGym(CALM, StaticPolicy(FLEET), seed=s).plan()
+               for s in range(8)]
+    s = summarize_ledgers(ledgers)
+    assert s.n_runs == 8
+    assert s.n_completed == sum(l.completed for l in ledgers)
+    assert s.time_h[0] == pytest.approx(
+        np.mean([l.time_h for l in ledgers if l.completed]))

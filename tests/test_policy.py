@@ -135,6 +135,37 @@ def test_policy_observation_is_current_only():
     assert ts == sorted(ts)
 
 
+def test_act_online_interface_bookkeeping():
+    """``act`` owns incumbent + decision-log state so any driver (the
+    evaluator, the gym) gets hysteresis and switch counting for free."""
+    from repro.core.pricing import SERVER_TYPES
+
+    book = {k: SERVER_TYPES[k].price_hr(True)
+            for k in ("K80", "P100", "V100", "PS")}
+
+    def obs(t_s, prices=book):
+        return PolicyObservation(t_s=t_s, steps_done=0.0, total_steps=64_000,
+                                 frac_running=1.0, prices_hr=prices,
+                                 revocations_per_hr={}, current=None)
+
+    pol = GreedyCheapest(n_workers=4)
+    pol.reset(np.random.default_rng(0))
+    first = pol.act(obs(0.0), None)
+    assert pol.decision_log == [(0.0, first)] and pol.switches == 0
+    # same conditions, current=None in the obs: the policy's own incumbent
+    # must hold (hysteresis), not re-decide from scratch
+    assert pol.act(obs(1800.0), None) == first
+    assert pol.switches == 0
+    # a decisive price move forces a switch, which the log records
+    moved = dict(book, **{first.kind: book[first.kind] * 20})
+    flipped = pol.act(obs(3600.0, moved), None)
+    assert flipped.kind != first.kind
+    assert pol.switches == 1 and pol.decision_log[-1] == (3600.0, flipped)
+    # reset clears online state for the next episode
+    pol.reset(np.random.default_rng(0))
+    assert pol.decision_log == [] and pol.switches == 0
+
+
 def test_default_policies_panel():
     pols = default_policies()
     assert len(pols) == 4

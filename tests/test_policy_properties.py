@@ -1,0 +1,123 @@
+"""Hypothesis property tests for ``core/policy.py`` invariants (ISSUE
+satellite):
+
+- the Oracle envelope never costs more than ANY static candidate policy
+  on the same trace, and every policy's billed cost stays at or below
+  the worst static configuration's;
+- online policies on the calm trace (no regime shifts, so the static-in-
+  hindsight envelope really is the floor) cost at least the Oracle;
+- decisions are always well-formed: positive fleet sizes, known server
+  types — under arbitrary observed market conditions;
+- gym membership schedules never provision a slot that is still active
+  or revoke one that is not (replayable through the SparseCluster state
+  machine with the cluster never empty).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import (GreedyCheapest, OraclePolicy, PolicyDecision,
+                               PolicyObservation, StaticPolicy,
+                               evaluate_policy)
+from repro.core.pricing import SERVER_TYPES
+from repro.traces.synth import default_trace_suite
+
+CALM = default_trace_suite(0)[0]
+CANDIDATES = tuple(PolicyDecision(kind, n)
+                   for kind in ("K80", "P100", "V100") for n in (2, 4, 8))
+N_TRIALS = 32
+
+
+@functools.lru_cache(maxsize=None)
+def _mean_cost(label_seed):
+    label, seed = label_seed
+    if label == "oracle":
+        pol = OraclePolicy(CANDIDATES)
+    elif label == "greedy":
+        pol = GreedyCheapest(n_workers=4)
+    else:
+        kind, n = label.split(":")
+        pol = StaticPolicy(PolicyDecision(kind, int(n)))
+    out = evaluate_policy(pol, CALM, n_trials=N_TRIALS, seed=seed)
+    return float(out.cost_usd.mean())
+
+
+def _worst_static(seed):
+    return max(_mean_cost((f"{d.kind}:{d.n_workers}", seed))
+               for d in CANDIDATES)
+
+
+@settings(max_examples=12, deadline=None)
+@given(dec=st.sampled_from(CANDIDATES), seed=st.integers(0, 2))
+def test_oracle_floor_and_worst_static_ceiling(dec, seed):
+    """Oracle <= any static candidate <= worst static config, same trace,
+    same trials (the envelope takes each trial's best candidate)."""
+    oracle = _mean_cost(("oracle", seed))
+    static = _mean_cost((f"{dec.kind}:{dec.n_workers}", seed))
+    assert oracle <= static + 1e-9
+    assert static <= _worst_static(seed) + 1e-9
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2))
+def test_online_policy_between_oracle_and_worst_static(seed):
+    """On the calm trace (no regime shift to exploit mid-run) an online
+    policy's cost sits inside the [oracle, worst-static] envelope."""
+    greedy = _mean_cost(("greedy", seed))
+    assert _mean_cost(("oracle", seed)) <= greedy + 1e-9
+    assert greedy <= _worst_static(seed) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(prices=st.lists(st.floats(0.01, 50.0), min_size=4, max_size=4),
+       intensities=st.lists(st.floats(0.0, 100.0), min_size=3, max_size=3),
+       n_workers=st.integers(1, 16),
+       t_s=st.floats(0.0, 86_400.0),
+       incumbent=st.one_of(st.none(), st.sampled_from(CANDIDATES)))
+def test_decisions_always_well_formed(prices, intensities, n_workers, t_s,
+                                      incumbent):
+    """Arbitrary observed market conditions can never produce a negative
+    or unknown fleet (PolicyDecision validates; decide must not bypass)."""
+    pol = GreedyCheapest(n_workers=n_workers)
+    obs = PolicyObservation(
+        t_s=t_s, steps_done=0.0, total_steps=64_000, frac_running=1.0,
+        prices_hr=dict(zip(("K80", "P100", "V100", "PS"), prices)),
+        revocations_per_hr=dict(zip(("K80", "P100", "V100"), intensities)),
+        current=incumbent)
+    dec = pol.decide(obs, None)
+    assert dec.n_workers >= 1
+    assert dec.n_ps >= 0
+    assert dec.kind in SERVER_TYPES
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 31),
+       dec=st.sampled_from(CANDIDATES),
+       train_steps=st.integers(8, 128))
+def test_gym_schedule_never_reuses_live_slots(seed, dec, train_steps):
+    """The realized membership timeline only ever joins free slots and
+    revokes active ones — pinned by replaying it through the SparseCluster
+    state machine, which raises on any violation."""
+    from repro.core.cluster import SparseCluster
+    from repro.gym import TransientGym, training_schedule
+    led = TransientGym(CALM, StaticPolicy(dec), seed=seed).plan()
+    sched = training_schedule(led, train_steps)
+    cluster = SparseCluster(max_slots=led.max_slots)
+    for slot, kind in sched.initial:
+        cluster.fill_and_activate(slot, 0, kind=kind)
+    by_step = {}
+    for ev in sched.events:
+        assert 0 <= ev.slot < led.max_slots
+        by_step.setdefault(ev.step, []).append(ev)
+    for step in range(sched.executed_steps):
+        for ev in by_step.get(step, ()):
+            if ev.kind == "revoke":
+                cluster.revoke(ev.slot, step)
+            elif ev.kind == "join":
+                cluster.fill_and_activate(ev.slot, step, kind=ev.server_kind)
+        assert cluster.n_active >= 1
