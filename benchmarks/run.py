@@ -16,13 +16,14 @@ from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
                         policy_replay, roofline_report, selective_revocation,
                         staleness_accuracy, table1_transient_vs_ondemand,
                         table3_scale_up_vs_out, table4_revocation_overhead,
-                        table5_ondemand_comparison)
+                        table5_ondemand_comparison, table6_heterogeneous)
 
 MODULES = {
     "table1": table1_transient_vs_ondemand,
     "table3": table3_scale_up_vs_out,
     "table4": table4_revocation_overhead,
     "table5": table5_ondemand_comparison,
+    "table6": table6_heterogeneous,
     "fig5": fig5_dynamic_cluster,
     "fig6": fig6_ps_bottleneck,
     "fig8": fig8_geo_distributed,

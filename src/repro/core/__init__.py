@@ -19,6 +19,7 @@ policy      online transient-aware provisioning policies + trace-replay
 from repro.core.cluster import SparseCluster, SlotState  # noqa: F401
 from repro.core.checkpoint import CheckpointManager  # noqa: F401
 from repro.core.elastic import (ElasticRuntime, RevocationEvent,  # noqa: F401
+                                make_hetero_train_step,
                                 make_masked_train_step, slot_batch)
 from repro.core.staleness import AsyncPSSimulator, AsyncWorker  # noqa: F401
 from repro.core.simulator import (ClusterSpec, WorkerSpec,  # noqa: F401

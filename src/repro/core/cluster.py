@@ -66,8 +66,9 @@ class SparseCluster:
         s.state, s.revoked_at_step = SlotState.REVOKED, step
         self.membership_version += 1
 
-    def fill_and_activate(self, slot: int, step: int, kind: str = "K80") -> None:
-        self.request(slot, kind)
+    def fill_and_activate(self, slot: int, step: int, kind: str = "K80",
+                          region: str = "us-east1") -> None:
+        self.request(slot, kind, region)
         self.activate(slot, step)
 
     # -- views --------------------------------------------------------------
@@ -77,6 +78,18 @@ class SparseCluster:
     @property
     def n_active(self) -> int:
         return len(self.active_slots())
+
+    def active_kinds(self) -> List[str]:
+        """Server kind per active slot, in slot order — the kind-vector the
+        heterogeneity layer allocates over."""
+        return [s.kind for s in self.slots if s.state == SlotState.ACTIVE]
+
+    def composition(self) -> Dict[str, int]:
+        """Kind -> active count (fleet summary for observations/ledgers)."""
+        out: Dict[str, int] = {}
+        for k in self.active_kinds():
+            out[k] = out.get(k, 0) + 1
+        return out
 
     # -- deterministic shard ownership ---------------------------------------
     def shard_assignment(self) -> Dict[int, List[int]]:

@@ -46,34 +46,23 @@ PyTree = Any
 # Masked-membership train step (fixed shapes; no recompile on change)
 # ---------------------------------------------------------------------------
 
-def make_masked_train_step(model: Model, tcfg: TrainConfig
-                           ) -> Callable[..., Tuple[TrainState, Dict]]:
-    """Elastic train step over a slot-major batch.
+def _make_row_weighted_loss(model: Model, tcfg: TrainConfig) -> Callable:
+    """Loss over a slot-major batch with arbitrary per-row weights.
 
-    batch leaves: (max_slots, per_slot, ...). active_mask: (max_slots,)
-    float32 in {0,1}. Loss averages over *active* tokens only; the LR
-    multiplier follows the paper's adaptive rule when tcfg.optimizer
-    .adaptive_lr, else the naive (configured-slots) rule.
+    ``row_w`` has shape ``(max_slots * per_slot,)``; a row's weight is its
+    share of the loss mean, so a slot's contribution is proportional to
+    its weighted row count — the unbiasedness seam both the masked (0/1
+    slot mask) and the hetero (per-slot example counts) steps build on.
     """
-    from repro.optim import make_optimizer, make_schedule
-    from repro.optim.optimizers import clip_by_global_norm
-
-    opt = make_optimizer(tcfg.optimizer)
-    sched = make_schedule(tcfg.schedule)
-    base_lr = tcfg.optimizer.lr
     cfg = model.cfg
 
-    def loss_fn(params, batch, active_mask):
+    def loss_fn(params, batch, row_w):
         flat = jax.tree.map(
             lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
             batch)
         remat = tcfg.remat != "none"
         logits, aux = model.apply(params, flat, remat=remat)
-        # row weights: slot mask broadcast over per-slot rows
-        slots, per = next(iter(batch.values())).shape[:2]
-        row_w = jnp.repeat(active_mask, per)                # (slots*per,)
         if cfg.family == "resnet":
-            w = row_w[:, None] * jnp.ones((1, 1), jnp.float32)
             lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
             onehot = jax.nn.one_hot(flat["labels"], logits.shape[-1],
                                     dtype=jnp.float32)
@@ -86,33 +75,102 @@ def make_masked_train_step(model: Model, tcfg: TrainConfig
         total = loss + cfg.router_aux_coef * aux
         return total, {"loss": loss, "aux": aux}
 
+    return loss_fn
+
+
+def _apply_grads(state: TrainState, grads, lr_scale, tcfg: TrainConfig,
+                 opt, sched, metrics) -> Tuple[TrainState, Dict]:
+    from repro.optim.optimizers import clip_by_global_norm, global_norm
+
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if tcfg.optimizer.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    lr = tcfg.optimizer.lr * sched(state.step) * lr_scale
+    updates, new_opt = opt.update(grads, state.opt, state.params, lr)
+    new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              state.params, updates)
+    new_state = TrainState(params=new_params, opt=new_opt,
+                           step=state.step + 1)
+    return new_state, dict(metrics, grad_norm=gnorm, lr=lr)
+
+
+def make_masked_train_step(model: Model, tcfg: TrainConfig
+                           ) -> Callable[..., Tuple[TrainState, Dict]]:
+    """Elastic train step over a slot-major batch.
+
+    batch leaves: (max_slots, per_slot, ...). active_mask: (max_slots,)
+    float32 in {0,1}. Loss averages over *active* tokens only; the LR
+    multiplier follows the paper's adaptive rule when tcfg.optimizer
+    .adaptive_lr, else the naive (configured-slots) rule.
+    """
+    from repro.optim import make_optimizer, make_schedule
+
+    opt = make_optimizer(tcfg.optimizer)
+    sched = make_schedule(tcfg.schedule)
+    loss_fn = _make_row_weighted_loss(model, tcfg)
+
     def train_step(state: TrainState, batch: Dict[str, jax.Array],
                    active_mask: jax.Array
                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        per = next(iter(batch.values())).shape[1]
+        row_w = jnp.repeat(active_mask, per)                # (slots*per,)
         (_, metrics), grads = jax.value_and_grad(
-            lambda p: loss_fn(p, batch, active_mask), has_aux=True
+            lambda p: loss_fn(p, batch, row_w), has_aux=True
         )(state.params)
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-        if tcfg.optimizer.grad_clip > 0:
-            grads, gnorm = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
-        else:
-            from repro.optim.optimizers import global_norm
-            gnorm = global_norm(grads)
-
         n_active = jnp.maximum(active_mask.sum(), 1.0)
         if tcfg.optimizer.adaptive_lr:
             lr_scale = n_active / tcfg.optimizer.base_workers       # C6: fix
         else:
             lr_scale = jnp.float32(active_mask.shape[0]             # naive TF
                                    / tcfg.optimizer.base_workers)
-        lr = base_lr * sched(state.step) * lr_scale
-        updates, new_opt = opt.update(grads, state.opt, state.params, lr)
-        new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
-                                  state.params, updates)
-        new_state = TrainState(params=new_params, opt=new_opt,
-                               step=state.step + 1)
-        return new_state, dict(metrics, grad_norm=gnorm, lr=lr,
-                               active=n_active)
+        new_state, out = _apply_grads(state, grads, lr_scale, tcfg, opt,
+                                      sched, metrics)
+        return new_state, dict(out, active=n_active)
+
+    return train_step
+
+
+def make_hetero_train_step(model: Model, tcfg: TrainConfig
+                           ) -> Callable[..., Tuple[TrainState, Dict]]:
+    """Heterogeneity-aware elastic step: ragged slot batches, fixed shapes.
+
+    ``slot_counts`` (``(max_slots,)`` float32) is the allocator's per-slot
+    example count: slot ``s`` contributes its first ``slot_counts[s]``
+    rows of the ``(max_slots, per_slot, ...)`` layout (a K80 slot carries
+    fewer live rows than a V100 slot). Rows past the count are masked, so
+    per-slot loss weight is proportional to allocated examples — the
+    weighted mean over live rows equals the plain mean over the dynamic
+    global batch, which is what makes the gradient an unbiased estimate
+    under *any* allocation. ``lr_ratio`` is the allocator's
+    aggregate-throughput ratio, generalizing the paper's adaptive-LR rule
+    (C6) beyond worker counts; both inputs are runtime data, so
+    allocation changes NEVER recompile.
+    """
+    from repro.optim import make_optimizer, make_schedule
+
+    opt = make_optimizer(tcfg.optimizer)
+    sched = make_schedule(tcfg.schedule)
+    loss_fn = _make_row_weighted_loss(model, tcfg)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array],
+                   slot_counts: jax.Array, lr_ratio: jax.Array
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        slots, per = next(iter(batch.values())).shape[:2]
+        row_w = (jnp.arange(per, dtype=jnp.float32)[None, :]
+                 < slot_counts[:, None]).astype(jnp.float32).reshape(-1)
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, row_w), has_aux=True
+        )(state.params)
+        if tcfg.optimizer.adaptive_lr:
+            lr_scale = jnp.maximum(lr_ratio, 1e-9)
+        else:
+            lr_scale = jnp.float32(slots / tcfg.optimizer.base_workers)
+        new_state, out = _apply_grads(state, grads, lr_scale, tcfg, opt,
+                                      sched, metrics)
+        return new_state, dict(out, active=(slot_counts > 0).sum(),
+                               examples=slot_counts.sum())
 
     return train_step
 
@@ -168,6 +226,7 @@ class RevocationEvent:
     slot: int
     kind: str            # "warn" | "revoke" | "join"
     server_kind: str = "K80"
+    region: str = "us-east1"
 
 
 class ElasticRuntime:
@@ -180,13 +239,19 @@ class ElasticRuntime:
     """
 
     def __init__(self, model: Model, tcfg: TrainConfig, dataset,
-                 cluster: SparseCluster, ckpt=None):
+                 cluster: SparseCluster, ckpt=None, allocator=None):
         self.model = model
         self.tcfg = tcfg
         self.dataset = dataset
         self.cluster = cluster
         self.ckpt = ckpt
-        self.step_fn = jax.jit(make_masked_train_step(model, tcfg))
+        # allocator (hetero.DynamicBatchAllocator): per-slot example counts
+        # re-solved on membership bumps; None = homogeneous masked mode
+        self.allocator = allocator
+        if allocator is None:
+            self.step_fn = jax.jit(make_masked_train_step(model, tcfg))
+        else:
+            self.step_fn = jax.jit(make_hetero_train_step(model, tcfg))
         self.events: Dict[int, list] = {}
         self.fast_saves = 0
         self.metrics_log: list = []
@@ -207,7 +272,8 @@ class ElasticRuntime:
                 self.cluster.revoke(e.slot, step)
             elif e.kind == "join":
                 self.cluster.fill_and_activate(e.slot, step,
-                                               kind=e.server_kind)
+                                               kind=e.server_kind,
+                                               region=e.region)
 
     def run(self, state: TrainState, num_steps: int, start_step: int = 0
             ) -> TrainState:
@@ -217,7 +283,15 @@ class ElasticRuntime:
                 raise RuntimeError(f"no active workers at step {step}")
             batch, mask = slot_batch(self.model.cfg, self.dataset, step,
                                      self.cluster)
-            state, m = self.step_fn(state, batch, mask)
+            if self.allocator is not None:
+                per = next(iter(batch.values())).shape[1]
+                alloc = self.allocator.allocation()
+                counts = np.minimum(alloc.counts, per)   # layout capacity
+                state, m = self.step_fn(state, batch,
+                                        jnp.asarray(counts, jnp.float32),
+                                        jnp.float32(alloc.lr_ratio))
+            else:
+                state, m = self.step_fn(state, batch, mask)
             self.metrics_log.append(
                 {"step": step, "loss": float(m["loss"]),
                  "active": int(m["active"]), "lr": float(m["lr"])})

@@ -40,6 +40,7 @@ from repro.core.simulator import (ACC_ANCHORS, JOIN_OVERHEAD_S,
                                   PS_CONTENTION_K, PS_RATE_STEPS_S,
                                   ClusterSpec, RunResult, _worker_rate)
 from repro.core.transient import LIFETIMES, MAX_LIFETIME_S
+from repro.hetero.rates import aggregate_rate_batch
 
 # Trial status codes (mirrors simulate_run's ``failure`` strings).
 RUNNING = 0
@@ -296,11 +297,14 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
     total = float(spec.total_steps)
 
     # --- synchronized event loop over the batch ------------------------
+    # (fleet rate per the spec's batching mode — hetero layer: "dynamic"
+    # = sum of active rates; "uniform" = n * slowest member)
     for _ in range(_MAX_EVENTS):
         m = status == RUNNING
         if not m.any():
             break
-        rate = ps_capped_rate_batch((active * rate_w).sum(axis=1), spec.n_ps)
+        rate = ps_capped_rate_batch(
+            aggregate_rate_batch(active, rate_w, spec.batching), spec.n_ps)
         n_active = active.sum(axis=1).astype(np.float64)
         has_rate = rate > 0
 

@@ -57,19 +57,75 @@ _MAX_EVENTS = 100_000
 
 @dataclasses.dataclass(frozen=True)
 class PolicyDecision:
-    """Target fleet: ``n_workers`` transient servers of one type + PS."""
+    """Target fleet + PS count. Homogeneous by default (``n_workers``
+    servers of ``kind``); ``fleet`` makes it heterogeneous — an ordered
+    ``((kind, count), ...)`` whose first entry provides the master slot
+    (build with ``PolicyDecision.mixed``)."""
     kind: str
     n_workers: int
     n_ps: int = 1
+    fleet: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __post_init__(self):
         if self.kind not in pricing.SERVER_TYPES:
             raise ValueError(f"unknown kind {self.kind!r}")
         if self.n_workers < 1:
             raise ValueError("n_workers must be >= 1")
+        if self.fleet is not None:
+            for kd, n in self.fleet:
+                if kd not in pricing.SERVER_TYPES:
+                    raise ValueError(f"unknown kind {kd!r} in fleet")
+                if n < 1:
+                    raise ValueError(f"fleet count for {kd} must be >= 1")
+            kinds = [kd for kd, _ in self.fleet]
+            if len(set(kinds)) != len(kinds):
+                raise ValueError("fleet kinds must be unique (merge counts "
+                                 "per kind)")
+            if sum(n for _, n in self.fleet) != self.n_workers:
+                raise ValueError("fleet counts must sum to n_workers")
+            if self.fleet[0][0] != self.kind:
+                raise ValueError("kind must match the fleet's first entry")
+
+    @staticmethod
+    def mixed(counts, n_ps: int = 1) -> "PolicyDecision":
+        """Heterogeneous decision from ``{kind: count}`` / pair sequence."""
+        pairs = tuple(counts.items()) if isinstance(counts, dict) \
+            else tuple(counts)
+        if not pairs:
+            raise ValueError("mixed fleet needs at least one kind")
+        return PolicyDecision(kind=pairs[0][0],
+                              n_workers=sum(n for _, n in pairs),
+                              n_ps=n_ps, fleet=pairs)
+
+    def composition(self) -> Dict[str, int]:
+        """Kind -> target worker count (the reconcile target)."""
+        if self.fleet is not None:
+            return dict(self.fleet)
+        return {self.kind: self.n_workers}
+
+    def to_spec(self, *, total_steps: int = DEFAULT_TOTAL_STEPS,
+                master_failover: bool = True, transient: bool = True,
+                batching: str = "dynamic",
+                n_ps: Optional[int] = None) -> ClusterSpec:
+        """The engine's ``ClusterSpec`` for this fleet — the one seam the
+        lookahead planner, the differential validator, and the benchmarks
+        all use, so a decision always prices the same everywhere.
+
+        ``n_ps`` defaults to the decision's own PS count (the gym and the
+        policy evaluator bill that many parameter servers, so validators
+        must model the same fleet); pass an override to drop the PS for
+        single-server planning."""
+        n_ps = self.n_ps if n_ps is None else n_ps
+        return ClusterSpec.mixed(self.composition(), batching=batching,
+                                 transient=transient, n_ps=n_ps,
+                                 total_steps=total_steps,
+                                 master_failover=master_failover)
 
     @property
     def label(self) -> str:
+        if self.fleet is not None:
+            mix = "+".join(f"{n}x{kd}" for kd, n in self.fleet)
+            return f"{mix}+{self.n_ps}PS"
         return f"{self.n_workers}x{self.kind}+{self.n_ps}PS"
 
 
@@ -84,6 +140,10 @@ class PolicyObservation:
     revocations_per_hr: Dict[str, float]  # trailing-hour observed intensity
     current: Optional[PolicyDecision]     # None before the first decision:
                                           # no incumbent, no hysteresis
+    fleet_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ^ realized composition of the live fleet (kind -> active workers),
+    #   which can differ from ``current``'s target mid-revocation-storm —
+    #   the heterogeneity-aware signal mixed-fleet policies plan from
 
 
 class Policy:
@@ -209,12 +269,9 @@ class LookaheadMC(Policy):
     def _score(self, dec: PolicyDecision, remaining_steps: int,
                tail: ReplayContext) -> float:
         from repro.core import mc
-        spec = ClusterSpec.homogeneous(dec.kind, dec.n_workers,
-                                       transient=True,
-                                       n_ps=dec.n_ps if dec.n_workers > 1
-                                       else 0,
-                                       total_steps=remaining_steps,
-                                       master_failover=True)
+        spec = dec.to_spec(total_steps=remaining_steps,
+                           master_failover=True,
+                           n_ps=dec.n_ps if dec.n_workers > 1 else 0)
         batch = mc.simulate_batch(spec, self.n_plan_trials, self._rng,
                                   replay=tail)
         fail = 1.0 - batch.completed.mean()
@@ -256,14 +313,15 @@ class OraclePolicy(Policy):
 
 def make_observation(ctx: ReplayContext, *, t_s: float, steps_done: float,
                      total_steps: int, frac_running: float = 1.0,
-                     current: Optional[PolicyDecision] = None
+                     current: Optional[PolicyDecision] = None,
+                     fleet_by_kind: Optional[Dict[str, int]] = None
                      ) -> PolicyObservation:
     """Assemble the current-conditions-only observation from a context.
 
     Shared by ``evaluate_policy`` and the training gym so both drivers
     show policies exactly the same market view: the spot quote per kind
-    at ``t_s`` and the trailing-hour revocation intensity — never the
-    future of the trace.
+    at ``t_s``, the trailing-hour revocation intensity, and the realized
+    per-kind fleet composition — never the future of the trace.
     """
     return PolicyObservation(
         t_s=t_s,
@@ -274,7 +332,8 @@ def make_observation(ctx: ReplayContext, *, t_s: float, steps_done: float,
                    for kd in pricing.SERVER_TYPES},
         revocations_per_hr={kd: ctx.revocation_intensity(kd, t_s)
                             for kd in ("K80", "P100", "V100")},
-        current=current)
+        current=current,
+        fleet_by_kind=dict(fleet_by_kind or {}))
 
 
 # ---------------------------------------------------------------------------
@@ -382,21 +441,31 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
             break
 
         # --- observe + act (decision shared across trials) ---------------
+        fleet_now: Dict[str, int] = {}
+        if slot_kind and running.any():
+            rows = np.nonzero(running)[0]
+            for kd in dict.fromkeys(slot_kind):      # first-seen order
+                cols = [i for i, kk in enumerate(slot_kind) if kk == kd]
+                mean = float(active[np.ix_(rows, cols)].sum(axis=1).mean())
+                n = int(round(mean))
+                if n > 0:                # no phantom zero-count kinds
+                    fleet_now[kd] = n
         obs = make_observation(ctx, t_s=t_epoch,
                                steps_done=float(steps[running].mean()),
                                total_steps=total_steps,
                                frac_running=float(running.mean()),
-                               current=current)
+                               current=current,
+                               fleet_by_kind=fleet_now)
         dec = policy.act(obs, ctx)
         current = dec
 
-        # --- reconcile the fleet to the decision ------------------------
+        # --- reconcile the fleet to the decision (per target kind) ------
+        target = dec.composition()
         S = len(slot_kind)
-        kind_mask = np.array([kd == dec.kind for kd in slot_kind],
-                             dtype=bool) if S else np.zeros(0, dtype=bool)
-        if S and (~kind_mask).any():
-            # release every slot of the wrong type (all trials at once)
-            off = ~kind_mask
+        off = np.array([kd not in target for kd in slot_kind],
+                       dtype=bool) if S else np.zeros(0, dtype=bool)
+        if S and off.any():
+            # release every slot of an untargeted type (all trials at once)
             rel = running[:, None] & active[:, off]
             release_t[:, off] = np.where(rel,
                                          np.minimum(release_t[:, off],
@@ -405,31 +474,34 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
             active[:, off] &= ~rel
             pend_t[:, off] = np.where(running[:, None], np.inf,
                                       pend_t[:, off])
-        have = np.zeros(N, dtype=np.int64)
-        if kind_mask.any():
-            cols = np.nonzero(kind_mask)[0]
-            have = (active[:, cols]
-                    | np.isfinite(pend_t[:, cols])).sum(axis=1)
-            # shrink: release surplus columns, last-joined first
-            excess = np.where(running, have - dec.n_workers, 0)
-            for c in cols[::-1]:
-                if not (excess > 0).any():
-                    break
-                hit = (excess > 0) & active[:, c]
-                release_t[hit, c] = t_epoch
-                active[hit, c] = False
-                excess[hit] -= 1
-                drop = (excess > 0) & np.isfinite(pend_t[:, c])
-                pend_t[drop, c] = np.inf
-                excess[drop] -= 1
-        need = np.where(running, np.maximum(dec.n_workers - have, 0), 0)
-        if (need > 0).any():
-            # initial provisioning (t=0) is free, like the engine's slot 0;
-            # later joins pay the sparse-mapping overhead
-            add_columns(dec.kind, need, t_epoch,
-                        0.0 if k == 0 else JOIN_OVERHEAD_S)
-            if k > 0:
-                ever_joined_late |= need > 0
+        kinds_arr = list(slot_kind)          # snapshot: columns added below
+        for tkind, t_n in target.items():
+            cols = np.array([i for i, kd in enumerate(kinds_arr)
+                             if kd == tkind], dtype=np.int64)
+            have = np.zeros(N, dtype=np.int64)
+            if cols.size:
+                have = (active[:, cols]
+                        | np.isfinite(pend_t[:, cols])).sum(axis=1)
+                # shrink: release surplus columns, last-joined first
+                excess = np.where(running, have - t_n, 0)
+                for c in cols[::-1]:
+                    if not (excess > 0).any():
+                        break
+                    hit = (excess > 0) & active[:, c]
+                    release_t[hit, c] = t_epoch
+                    active[hit, c] = False
+                    excess[hit] -= 1
+                    drop = (excess > 0) & np.isfinite(pend_t[:, c])
+                    pend_t[drop, c] = np.inf
+                    excess[drop] -= 1
+            need = np.where(running, np.maximum(t_n - have, 0), 0)
+            if (need > 0).any():
+                # initial provisioning (t=0) is free, like the engine's
+                # slot 0; later joins pay the sparse-mapping overhead
+                add_columns(tkind, need, t_epoch,
+                            0.0 if k == 0 else JOIN_OVERHEAD_S)
+                if k > 0:
+                    ever_joined_late |= need > 0
 
         # --- advance the segment [t_epoch, t_epoch + epoch_s) -----------
         S = len(slot_kind)

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import pricing
 from repro.core.transient import (GCE_WARNING_S, LIFETIMES, TransientServer,
                                   provision)
+from repro.hetero.rates import aggregate_rate
 
 # --- calibration constants (sources in module docstring) -------------------
 PS_RATE_STEPS_S = 60.0          # service capacity per parameter server
@@ -107,6 +108,12 @@ class ClusterSpec:
     master_failover: bool = False   # False = paper's TF behaviour (master
                                     # revocation kills the job); True = our
                                     # redesigned master-less checkpointing
+    batching: str = "dynamic"    # mixed-fleet work division (hetero layer):
+                                 # "dynamic" = throughput-proportional
+                                 # shares (fleet rate = sum of rates),
+                                 # "uniform" = equal shares (the slowest
+                                 # device dominates: n * min rate).
+                                 # Homogeneous fleets agree under both.
 
     @staticmethod
     def homogeneous(kind: str, n: int, *, transient: bool = True,
@@ -119,6 +126,34 @@ class ClusterSpec:
             workers=tuple(WorkerSpec(kind, transient) for _ in range(n)),
             n_ps=n_ps, total_steps=total_steps,
             master_failover=master_failover)
+
+    @staticmethod
+    def mixed(counts, *, batching: str = "dynamic", transient: bool = True,
+              n_ps: Optional[int] = None,
+              total_steps: int = DEFAULT_TOTAL_STEPS,
+              master_failover: bool = False) -> "ClusterSpec":
+        """Heterogeneous fleet from ``{kind: count}`` (or ``(kind, count)``
+        pairs); slot order follows the mapping's iteration order, so the
+        first listed kind provides the master slot."""
+        pairs = list(counts.items()) if isinstance(counts, dict) \
+            else list(counts)
+        workers = tuple(WorkerSpec(kind, transient)
+                        for kind, n in pairs for _ in range(n))
+        if not workers:
+            raise ValueError("mixed fleet has no workers")
+        if n_ps is None:
+            n_ps = 0 if len(workers) == 1 else 1
+        return ClusterSpec(workers=workers, n_ps=n_ps,
+                           total_steps=total_steps,
+                           master_failover=master_failover,
+                           batching=batching)
+
+    def fleet_label(self) -> str:
+        """Human label like ``2xK80+2xV100`` (kind order of first use)."""
+        comp: Dict[str, int] = {}
+        for w in self.workers:
+            comp[w.kind] = comp.get(w.kind, 0) + 1
+        return "+".join(f"{n}x{k}" for k, n in comp.items())
 
 
 @dataclasses.dataclass
@@ -177,10 +212,14 @@ def simulate_run(spec: ClusterSpec, rng: np.random.Generator) -> RunResult:
     pending_joins: List[Tuple[int, float]] = []   # (slot index, activation t)
 
     def agg_rate() -> float:
-        s = sum(_worker_rate(spec.workers[i], spec.ps_region)
-                for i in range(len(spec.workers))
-                if active[i] and servers[i] is not None)
-        return ps_capped_rate(s, spec.n_ps)
+        # hetero layer: uniform batching on a mixed fleet is dominated by
+        # its slowest member (T_step = max_k alloc_k/rate_k); dynamic
+        # batching recovers the sum of rates. Homogeneous fleets agree.
+        rates = [_worker_rate(spec.workers[i], spec.ps_region)
+                 for i in range(len(spec.workers))
+                 if active[i] and servers[i] is not None]
+        return ps_capped_rate(aggregate_rate(np.array(rates), spec.batching),
+                              spec.n_ps)
 
     guard = 0
     while steps < spec.total_steps:

@@ -45,6 +45,8 @@ from repro.core.policy import (Policy, PolicyDecision, StaticPolicy,
                                make_observation)
 from repro.core.simulator import (DEFAULT_TOTAL_STEPS, JOIN_OVERHEAD_S,
                                   Summary, ps_capped_rate)
+from repro.hetero.profiles import composition as kind_composition
+from repro.hetero.rates import _check_mode, aggregate_rate
 from repro.traces.replay import ReplayContext
 
 # Event-type tags on the wall-clock membership timeline.
@@ -61,6 +63,7 @@ class SlotEvent:
     slot: int             # cluster slot index (stable; reused after revoke)
     kind: str             # EV_JOIN | EV_REVOKE | EV_RELEASE
     server_kind: str      # "K80" | "P100" | "V100"
+    region: str = "us-east1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +77,8 @@ class EpochRecord:
     spot_price_hr: float  # pricing.price_at for the decision's kind
     cost_usd: float       # cumulative billed cost at epoch start
     revocations: int      # cumulative lifetime revocations
+    n_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ^ active-fleet composition (mixed fleets: the hetero layer's view)
 
 
 @dataclasses.dataclass
@@ -92,6 +97,11 @@ class GymLedger:
     max_slots: int
     epochs: List[EpochRecord]
     schedule: List[SlotEvent]
+    # per-kind billed cost breakout ("PS" included) — heterogeneous fleets
+    # are priced per kind, so the ledger shows where the dollars went
+    cost_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    batching: str = "dynamic"     # work-division mode the plan priced;
+                                  # phase-2 execution must match it
     # phase-2 results (filled by the executors; NaN/0 when plan-only)
     executed_steps: int = 0
     accuracy: float = float("nan")        # real eval accuracy in [0, 1]
@@ -121,6 +131,8 @@ class GymLedger:
             "vsteps_done": self.vsteps_done,
             "avg_active_workers": self.avg_active_workers,
             "revocations": self.revocations, "max_slots": self.max_slots,
+            "cost_by_kind": dict(self.cost_by_kind),
+            "batching": self.batching,
             "executed_steps": self.executed_steps,
             "accuracy": None if math.isnan(self.accuracy) else self.accuracy,
             "final_loss": (None if math.isnan(self.final_loss)
@@ -161,6 +173,7 @@ class _Slot:
     """Internal per-server state of the fleet model."""
     kind: str
     cid: int                      # cluster slot index
+    region: str = "us-east1"
     t_pending: float = np.inf     # activation due time; inf = not pending
     t_start: float = np.nan       # activation time; NaN = never activated
     t_revoke: float = np.inf      # drawn lifetime expiry (absolute)
@@ -185,7 +198,9 @@ class TransientGym:
     def __init__(self, trace, policy: Optional[Policy] = None, *,
                  total_steps: int = DEFAULT_TOTAL_STEPS,
                  epoch_s: float = 1800.0, max_h: float = 24.0,
-                 refill: bool = False, seed: int = 0):
+                 refill: bool = False, seed: int = 0,
+                 batching: str = "dynamic"):
+        _check_mode(batching)
         if isinstance(trace, ReplayContext):
             self.ctx = trace
         else:
@@ -198,6 +213,7 @@ class TransientGym:
         self.max_h = float(max_h)
         self.refill = bool(refill)
         self.seed = int(seed)
+        self.batching = batching      # mixed-fleet work division model
 
     # -- wall-clock model -------------------------------------------------
 
@@ -232,22 +248,27 @@ class TransientGym:
         def draw_lifetime(kind: str, at: float) -> float:
             return float(bound.lifetimes(kind, zero, at, rng)[0])
 
-        def cost_until(tq: float) -> float:
-            c = 0.0
+        def cost_by_kind_until(tq: float) -> Dict[str, float]:
+            by_kind: Dict[str, float] = {}
             for s in slots:
                 if not np.isfinite(s.t_start):
                     continue
                 end = min(s.t_revoke, s.t_release, tq)
                 secs = max(0.0, end - s.t_start)
                 if self.ctx.has_prices(s.kind):
-                    c += float(bound.cost_usd(s.kind,
-                                              np.array([s.t_start]),
-                                              np.array([s.t_start + secs]))[0])
+                    c = float(bound.cost_usd(s.kind,
+                                             np.array([s.t_start]),
+                                             np.array([s.t_start + secs]))[0])
                 else:
-                    c += secs * pricing.SERVER_TYPES[s.kind].transient_hr \
+                    c = secs * pricing.SERVER_TYPES[s.kind].transient_hr \
                         / 3600.0
-            c += ps_int * pricing.SERVER_TYPES["PS"].ondemand_hr / 3600.0
-            return c
+                by_kind[s.kind] = by_kind.get(s.kind, 0.0) + c
+            by_kind["PS"] = ps_int * pricing.SERVER_TYPES["PS"].ondemand_hr \
+                / 3600.0
+            return by_kind
+
+        def cost_until(tq: float) -> float:
+            return sum(cost_by_kind_until(tq).values())
 
         k = 0
         dec: Optional[PolicyDecision] = None
@@ -257,56 +278,68 @@ class TransientGym:
                 break
 
             # --- observe + act (the online policy interface) -------------
+            fleet_now = kind_composition(s.kind for s in slots if s.active)
             obs = make_observation(self.ctx, t_s=t_epoch, steps_done=vsteps,
-                                   total_steps=self.total_steps)
+                                   total_steps=self.total_steps,
+                                   fleet_by_kind=fleet_now)
             dec = self.policy.act(obs, self.ctx)
 
-            # --- reconcile the fleet to the decision ----------------------
+            # --- reconcile the fleet to the decision (per target kind) ----
             if k == 0 or self.refill:
-                # release live slots of the wrong type
+                target = dec.composition()
+                # release live slots of untargeted types
                 for s in slots:
-                    if s.live and s.kind != dec.kind:
+                    if s.live and s.kind not in target:
                         if s.active:
                             s.t_release = t_epoch
                             s.active = False
                             events.append(SlotEvent(t_epoch, vsteps, s.cid,
-                                                    EV_RELEASE, s.kind))
+                                                    EV_RELEASE, s.kind,
+                                                    s.region))
                         s.t_pending = np.inf
                         free_cids.append(s.cid)
-                # shrink surplus of the right type, last-provisioned first
-                live = [s for s in slots if s.live and s.kind == dec.kind]
-                for s in reversed(live[dec.n_workers:]):
-                    if s.active:
-                        s.t_release = t_epoch
-                        s.active = False
-                        events.append(SlotEvent(t_epoch, vsteps, s.cid,
-                                                EV_RELEASE, s.kind))
-                    s.t_pending = np.inf
-                    free_cids.append(s.cid)
-                # grow: initial provisioning (k=0) is free, like the
-                # engine's slot 0; later joins pay the sparse-mapping cost
-                need = dec.n_workers - min(len(live), dec.n_workers)
-                overhead = 0.0 if k == 0 else JOIN_OVERHEAD_S
-                for _ in range(need):
-                    slots.append(_Slot(kind=dec.kind, cid=alloc_cid(),
-                                       t_pending=t_epoch + overhead))
+                for tkind, t_n in target.items():
+                    # shrink surplus of this type, last-provisioned first
+                    live = [s for s in slots if s.live and s.kind == tkind]
+                    for s in reversed(live[t_n:]):
+                        if s.active:
+                            s.t_release = t_epoch
+                            s.active = False
+                            events.append(SlotEvent(t_epoch, vsteps, s.cid,
+                                                    EV_RELEASE, s.kind,
+                                                    s.region))
+                        s.t_pending = np.inf
+                        free_cids.append(s.cid)
+                    # grow: initial provisioning (k=0) is free, like the
+                    # engine's slot 0; later joins pay sparse-mapping cost
+                    need = t_n - min(len(live), t_n)
+                    overhead = 0.0 if k == 0 else JOIN_OVERHEAD_S
+                    for _ in range(need):
+                        slots.append(_Slot(kind=tkind, cid=alloc_cid(),
+                                           t_pending=t_epoch + overhead))
 
             n_act = sum(1 for s in slots if s.active)
+            n_by_kind = kind_composition(s.kind for s in slots if s.active)
             epochs.append(EpochRecord(
                 epoch=k, t_s=t_epoch, vsteps=vsteps, n_active=n_act,
                 decision=dec.label,
                 spot_price_hr=float(pricing.price_at(dec.kind, t_epoch,
                                                      trace=self.ctx)),
                 cost_usd=cost_until(max(t, t_epoch)),
-                revocations=revocations))
+                revocations=revocations,
+                n_by_kind=n_by_kind))
 
             # --- advance the segment [t_epoch, t_epoch + epoch_s) ---------
             t = max(t, t_epoch)
             t_seg_end = min(t_epoch + self.epoch_s, max_s)
             for _ in range(mc._MAX_EVENTS):
+                # hetero layer: uniform batching on a mixed fleet runs at
+                # the slowest member's pace; dynamic recovers sum-of-rates
                 rate = ps_capped_rate(
-                    sum(pricing.SERVER_TYPES[s.kind].steps_per_sec
-                        for s in slots if s.active), dec.n_ps)
+                    aggregate_rate(
+                        np.array([pricing.SERVER_TYPES[s.kind].steps_per_sec
+                                  for s in slots if s.active]),
+                        self.batching), dec.n_ps)
                 n_active = sum(1 for s in slots if s.active)
                 t_rev = min((s.t_revoke for s in slots if s.active),
                             default=np.inf)
@@ -340,7 +373,7 @@ class TransientGym:
                     s.active = False
                     revocations += 1
                     events.append(SlotEvent(t, vsteps, s.cid, EV_REVOKE,
-                                            s.kind))
+                                            s.kind, s.region))
                     free_cids.append(s.cid)
                 elif what == "activate":
                     s = min((s for s in slots if np.isfinite(s.t_pending)),
@@ -350,20 +383,22 @@ class TransientGym:
                     s.active = True
                     s.t_revoke = t + draw_lifetime(s.kind, t)
                     events.append(SlotEvent(t, vsteps, s.cid, EV_JOIN,
-                                            s.kind))
+                                            s.kind, s.region))
             k += 1
 
         if status == mc.RUNNING:                   # hit the max_h wall
             status = mc.NO_PROGRESS
         t_end = min(t, max_s)
         avg_w = worker_int / t_end if t_end > 0 else 0.0
+        by_kind = cost_by_kind_until(t_end)
         return GymLedger(
             trace=self.ctx.trace.name, policy=self.policy.name,
             total_steps=self.total_steps, status=int(status),
-            time_h=t_end / 3600.0, cost_usd=cost_until(t_end),
+            time_h=t_end / 3600.0, cost_usd=sum(by_kind.values()),
             vsteps_done=vsteps, avg_active_workers=avg_w,
             revocations=revocations, max_slots=max(next_cid, 1),
-            epochs=epochs, schedule=events)
+            epochs=epochs, schedule=events, cost_by_kind=by_kind,
+            batching=self.batching)
 
     # -- full episode: plan + train + async staleness ----------------------
 
@@ -424,18 +459,21 @@ def training_schedule(ledger: GymLedger, train_steps: int
         if ev.kind == EV_JOIN:
             events.append(RevocationEvent(step=step, slot=ev.slot,
                                           kind="join",
-                                          server_kind=ev.server_kind))
+                                          server_kind=ev.server_kind,
+                                          region=ev.region))
         else:
             if ev.kind == EV_REVOKE:     # 30 s warning -> fast checkpoint
                 wstep = max(step - 1, 0)
                 if (ev.slot, step) not in warned:
                     events.append(RevocationEvent(step=wstep, slot=ev.slot,
                                                   kind="warn",
-                                                  server_kind=ev.server_kind))
+                                                  server_kind=ev.server_kind,
+                                                  region=ev.region))
                     warned.add((ev.slot, step))
             events.append(RevocationEvent(step=step, slot=ev.slot,
                                           kind="revoke",
-                                          server_kind=ev.server_kind))
+                                          server_kind=ev.server_kind,
+                                          region=ev.region))
     return TrainingSchedule(executed_steps=executed, initial=tuple(initial),
                             events=tuple(events))
 
@@ -523,7 +561,26 @@ def execute_masked(ledger: GymLedger, *, arch: str = "resnet32-cifar10",
     cluster = SparseCluster(max_slots=ledger.max_slots)
     for slot, kind in sched.initial:
         cluster.fill_and_activate(slot, 0, kind=kind)
-    rt = ElasticRuntime(model, tcfg, dataset, cluster, ckpt)
+    # mixed-kind timeline -> heterogeneity-aware execution: throughput-
+    # proportional per-slot batch counts + aggregate-throughput LR rule.
+    # The allocator's global batch leaves 2x layout headroom so fast slots
+    # can actually take a larger-than-uniform share (rows are capped at
+    # per_slot). Homogeneous timelines — and mixed plans priced under
+    # "uniform" batching, whose equal-shares semantics IS the plain
+    # masked step — keep the masked execution path.
+    kinds_seen = {kind for _, kind in sched.initial} \
+        | {e.server_kind for e in sched.events if e.kind == "join"}
+    allocator = None
+    if len(kinds_seen) > 1 and ledger.batching == "dynamic":
+        from repro.hetero import DynamicBatchAllocator
+        allocator = DynamicBatchAllocator(
+            cluster,
+            global_batch=max(per_slot * ledger.max_slots // 2, 1),
+            cap_per_slot=per_slot,
+            base_workers=max(len(sched.initial), 1),
+            base_kind=sched.initial[0][1] if sched.initial else "K80")
+    rt = ElasticRuntime(model, tcfg, dataset, cluster, ckpt,
+                        allocator=allocator)
     rt.add_events(sched.events)
     state = init_state(model, tcfg, jax.random.key(seed))
     if sched.executed_steps > 0:

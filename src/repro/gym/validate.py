@@ -33,8 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.policy import PolicyDecision, StaticPolicy
-from repro.core.simulator import (DEFAULT_TOTAL_STEPS, ClusterSpec, Summary,
-                                  simulate_many)
+from repro.core.simulator import DEFAULT_TOTAL_STEPS, Summary, simulate_many
 from repro.gym.gym import GymLedger, TransientGym, summarize_ledgers
 from repro.traces.replay import ReplayContext
 from repro.traces.synth import synthetic_trace
@@ -112,6 +111,7 @@ def differential_validate(trace, decision: PolicyDecision, *,
                           n_gym: int = 32, n_engine: int = 512,
                           seed: int = 0, epoch_s: float = 1800.0,
                           max_h: float = 24.0,
+                          batching: str = "dynamic",
                           ledgers: Optional[Sequence[GymLedger]] = None
                           ) -> DiffReport:
     """Replay ``decision`` as a static fleet through BOTH implementations.
@@ -119,9 +119,11 @@ def differential_validate(trace, decision: PolicyDecision, *,
     Gym side: ``n_gym`` plan-only episodes (``refill=False`` — provision
     once, revoked slots stay dead, the engine's semantics), one bootstrap
     draw per seed. Engine side: ``simulate_many(..., trace=...)`` on the
-    equivalent ``ClusterSpec`` in "zero" mode. Pass ``ledgers`` to reuse
-    already-run gym episodes (e.g. trained ones from the benchmark)
-    instead of planning fresh ones.
+    equivalent ``ClusterSpec`` in "zero" mode. Mixed decisions (built
+    with ``PolicyDecision.mixed``) validate end-to-end: both sides model
+    the same ``batching`` mode via the hetero layer's fleet-rate rule.
+    Pass ``ledgers`` to reuse already-run gym episodes (e.g. trained
+    ones from the benchmark) instead of planning fresh ones.
     """
     ctx = trace if isinstance(trace, ReplayContext) \
         else ReplayContext(trace, bootstrap="zero")
@@ -129,14 +131,13 @@ def differential_validate(trace, decision: PolicyDecision, *,
         ledgers = [TransientGym(ctx, StaticPolicy(decision),
                                 total_steps=total_steps, epoch_s=epoch_s,
                                 max_h=max_h, refill=False,
-                                seed=seed + i).plan()
+                                seed=seed + i, batching=batching).plan()
                    for i in range(n_gym)]
     gym_sum = summarize_ledgers(list(ledgers))
     gym_steps = float(np.mean([l.vsteps_done for l in ledgers]))
 
-    spec = ClusterSpec.homogeneous(
-        decision.kind, decision.n_workers, transient=True,
-        n_ps=decision.n_ps, total_steps=total_steps, master_failover=True)
+    spec = decision.to_spec(total_steps=total_steps, master_failover=True,
+                            batching=batching)
     eng_sum = simulate_many(spec, n_runs=n_engine, seed=seed + 10_000,
                             trace=ctx)
     return DiffReport(

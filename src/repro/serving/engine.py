@@ -78,6 +78,27 @@ class ServeEngine:
                 self._prefill_cursor[i] = 0
                 self._reset_row(i)
 
+    def revoke_slot(self, slot: int) -> Optional[Request]:
+        """Membership shrink mid-serve: the serving analogue of a worker
+        revocation. The slot's in-flight request loses its decode state
+        (the cache row is reconstructible, never checkpointed) and is
+        re-enqueued at the FRONT of the queue to regenerate from scratch;
+        the emptied row is masked out exactly like an emptied training
+        slot — no recompilation, the next occupant resets the row.
+
+        Returns the displaced request (None if the slot was empty).
+        ``tokens_decoded`` keeps counting the lost tokens: they were real
+        decode work, which is precisely the revocation overhead the paper
+        measures.
+        """
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self._prefill_cursor.pop(slot, None)
+        if req is not None and not req.done:
+            req.generated = []
+            self._pending.insert(0, req)
+        return req
+
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)

@@ -1,4 +1,5 @@
-"""Elastic runtime invariants: adaptive LR, masking, restart-equivalence."""
+"""Elastic runtime invariants: adaptive LR, masking, restart-equivalence,
+and the heterogeneity-aware (ragged slot batch) train step."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +9,8 @@ from repro.config import (OptimizerConfig, ScheduleConfig, TrainConfig,
                           get_config)
 from repro.core import (CheckpointManager, ElasticRuntime, RevocationEvent,
                         SparseCluster)
-from repro.core.elastic import make_masked_train_step, slot_batch
+from repro.core.elastic import (make_hetero_train_step,
+                                make_masked_train_step, slot_batch)
 from repro.data.pipeline import ShardedDataset
 from repro.models import layers as L
 from repro.models.builder import build_model
@@ -106,6 +108,94 @@ def test_no_workers_raises(setup):
     rt.add_events([RevocationEvent(step=1, slot=0, kind="revoke")])
     with pytest.raises(RuntimeError, match="no active workers"):
         rt.run(state, 3)
+
+
+def _tree_allclose(a, b, atol=1e-7):
+    same = jax.tree.map(lambda x, y: bool(jnp.allclose(x, y, atol=atol)),
+                        a, b)
+    return all(jax.tree.leaves(same))
+
+
+def test_hetero_step_collapses_to_masked(setup):
+    """counts = per_slot * mask and lr_ratio = n_active/base reproduce the
+    homogeneous masked step exactly — the hetero step is a strict
+    generalization, not a fork."""
+    model, state, ds = setup
+    masked = jax.jit(make_masked_train_step(model, TCFG))
+    hetero = jax.jit(make_hetero_train_step(model, TCFG))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    cluster.fill_and_activate(2, 0)
+    batch, mask = slot_batch(CFG, ds, 0, cluster)
+    per = next(iter(batch.values())).shape[1]
+    s_m, m_m = masked(state, batch, mask)
+    s_h, m_h = hetero(state, batch, mask * per,
+                      jnp.float32(2.0 / TCFG.optimizer.base_workers))
+    assert float(m_m["loss"]) == pytest.approx(float(m_h["loss"]), abs=1e-6)
+    assert float(m_m["lr"]) == pytest.approx(float(m_h["lr"]), rel=1e-6)
+    assert _tree_allclose(s_m.params, s_h.params)
+
+
+def test_hetero_rows_beyond_counts_are_masked(setup):
+    """Poisoning rows past a slot's allocated count must not change the
+    step — the ragged-batch contract that makes allocation runtime data."""
+    model, state, ds = setup
+    hetero = jax.jit(make_hetero_train_step(model, TCFG))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    cluster.fill_and_activate(1, 0)
+    batch, _ = slot_batch(CFG, ds, 0, cluster)
+    counts = jnp.asarray([2.0, 1.0, 0.0, 0.0])      # ragged allocation
+    ratio = jnp.float32(2.0)
+    s1, m1 = hetero(state, batch, counts, ratio)
+    poisoned = dict(batch)
+    # slot 0 rows >= 2, slot 1 rows >= 1, all of slots 2-3
+    poisoned["tokens"] = batch["tokens"].at[0, 2:].set(0) \
+        .at[1, 1:].set(0).at[2:].set(0)
+    poisoned["labels"] = batch["labels"].at[0, 2:].set(0) \
+        .at[1, 1:].set(0).at[2:].set(0)
+    s2, m2 = hetero(state, poisoned, counts, ratio)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-6)
+    assert _tree_allclose(s1.params, s2.params)
+    assert float(m1["examples"]) == 3.0
+    assert int(m1["active"]) == 2
+
+
+def test_hetero_lr_scales_with_throughput_ratio(setup):
+    """The adaptive-LR multiplier is the aggregate-throughput ratio — a
+    runtime scalar, so doubling the ratio exactly doubles the LR."""
+    model, state, ds = setup
+    hetero = jax.jit(make_hetero_train_step(model, TCFG))
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    batch, _ = slot_batch(CFG, ds, 0, cluster)
+    counts = jnp.asarray([2.0, 0.0, 0.0, 0.0])
+    _, m1 = hetero(state, batch, counts, jnp.float32(1.0))
+    _, m2 = hetero(state, batch, counts, jnp.float32(2.0))
+    assert float(m2["lr"]) == pytest.approx(2 * float(m1["lr"]), rel=1e-5)
+
+
+def test_elastic_runtime_with_allocator(setup):
+    """Mixed-kind cluster through ElasticRuntime + DynamicBatchAllocator:
+    V100 slots carry more examples than K80 slots, the allocation re-solves
+    on membership changes, and training stays finite throughout."""
+    from repro.hetero import DynamicBatchAllocator
+    model, state, ds = setup
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0, kind="K80")
+    cluster.fill_and_activate(1, 0, kind="V100")
+    alloc = DynamicBatchAllocator(cluster, global_batch=5, cap_per_slot=2,
+                                  base_workers=2, base_kind="K80")
+    rt = ElasticRuntime(model, TCFG, ds, cluster, allocator=alloc)
+    rt.add_events([RevocationEvent(step=2, slot=2, kind="join",
+                                   server_kind="V100")])
+    rt.run(state, 4)
+    a = alloc.allocation()
+    assert a.counts[1] >= a.counts[0]            # V100 >= K80 share
+    assert alloc.solve_count == 2                # initial + join re-solve
+    assert all(np.isfinite(m["loss"]) for m in rt.metrics_log)
+    actives = [m["active"] for m in rt.metrics_log]
+    assert actives == [2, 2, 3, 3]
 
 
 def test_restart_equivalence(setup, tmp_path):

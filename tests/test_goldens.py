@@ -32,6 +32,7 @@ MODULES = {
     "table3_scale_up_vs_out": "benchmarks.table3_scale_up_vs_out",
     "table4_revocation_overhead": "benchmarks.table4_revocation_overhead",
     "table5_ondemand_comparison": "benchmarks.table5_ondemand_comparison",
+    "table6_heterogeneous": "benchmarks.table6_heterogeneous",
     "frontier": "benchmarks.frontier",
 }
 

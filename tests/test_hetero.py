@@ -1,0 +1,326 @@
+"""Heterogeneity layer: device profiles, the dynamic batch allocator,
+mixed-fleet engine semantics, and the runtime allocator.
+
+The allocator contract — allocations sum exactly to the global batch,
+are non-negative, respect memory caps, are deterministic, and collapse
+to uniform for equal kinds — is property-tested with hypothesis in
+test_hetero_properties.py; the deterministic spot-checks here exercise
+the same invariants where hypothesis is unavailable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pricing
+from repro.core.cluster import SparseCluster
+from repro.core.policy import PolicyDecision
+from repro.core.simulator import ClusterSpec, simulate_many
+from repro.hetero import (DEVICE_PROFILES, PAPER_BATCH, DeviceProfile,
+                          DynamicBatchAllocator, aggregate_rate,
+                          aggregate_rate_batch, allocate, caps_for, profile,
+                          register_profile, step_time_s)
+
+KINDS = ("K80", "P100", "V100")
+
+
+# ---------------------------------------------------------------------------
+# Profiles: calibration provenance and price-book wiring
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_compute_kinds_not_ps():
+    assert set(KINDS) <= set(DEVICE_PROFILES)
+    assert "PS" not in DEVICE_PROFILES          # no training compute
+
+def test_profile_rates_match_simulator_calibration():
+    for kind in KINDS:
+        p = profile(kind)
+        assert p.steps_per_sec == pytest.approx(
+            pricing.SERVER_TYPES[kind].steps_per_sec)
+        assert p.examples_per_sec == pytest.approx(
+            pricing.SERVER_TYPES[kind].steps_per_sec * PAPER_BATCH)
+
+
+def test_profile_prices_are_live_from_price_book():
+    for kind in KINDS:
+        assert profile(kind).price_hr == \
+            pricing.SERVER_TYPES[kind].transient_hr
+        assert profile(kind).ondemand_hr == \
+            pricing.SERVER_TYPES[kind].ondemand_hr
+
+
+def test_register_custom_profile():
+    custom = DeviceProfile(kind="TESTGPU", examples_per_sec=100.0,
+                           mem_examples=64)
+    register_profile(custom)
+    try:
+        assert profile("TESTGPU") is custom
+    finally:
+        DEVICE_PROFILES.pop("TESTGPU")
+    with pytest.raises(KeyError, match="TESTGPU"):
+        profile("TESTGPU")
+
+
+def test_memory_caps_hold_paper_batch():
+    """Every profiled device must at least hold the paper's per-worker
+    batch — otherwise the calibrated rates would be unreachable."""
+    for kind in KINDS:
+        assert profile(kind).mem_examples >= PAPER_BATCH
+
+
+# ---------------------------------------------------------------------------
+# Allocator contract (deterministic spot-checks; hypothesis version in
+# test_hetero_properties.py)
+# ---------------------------------------------------------------------------
+
+def test_allocation_contract_spot_checks():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        kinds = list(rng.choice(KINDS, size=rng.integers(1, 9)))
+        batch = int(rng.integers(0, 513))
+        for batching in ("dynamic", "uniform"):
+            a = allocate(kinds, batch, batching=batching)
+            assert a.sum() == batch               # exact, no examples lost
+            assert (a >= 0).all()
+            assert (a <= caps_for(kinds)).all()
+            b = allocate(kinds, batch, batching=batching)
+            assert (a == b).all()                 # deterministic
+
+
+def test_equal_kinds_collapse_to_uniform():
+    """All-equal fleets split evenly (+-1 from integer rounding, resolved
+    by slot index) under BOTH batching modes."""
+    for kind, n, batch in (("K80", 4, 126), ("V100", 3, 128),
+                           ("P100", 5, 7), ("K80", 1, 64)):
+        for batching in ("dynamic", "uniform"):
+            a = allocate([kind] * n, batch, batching=batching)
+            assert a.max() - a.min() <= 1
+            assert list(a) == sorted(a, reverse=True)   # earlier slots first
+
+
+def test_allocation_respects_custom_caps():
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        kinds = list(rng.choice(KINDS, size=rng.integers(1, 9)))
+        caps = rng.integers(1, 65, size=len(kinds))
+        batch = int(rng.integers(0, int(caps.sum()) + 1))
+        a = allocate(kinds, batch, caps=caps)
+        assert a.sum() == batch and (a >= 0).all() and (a <= caps).all()
+
+
+def test_dynamic_never_slower_than_uniform():
+    """T_step = max_k(alloc_k/rate_k): the proportional allocation is the
+    minimizer, so dynamic step time <= uniform step time, always."""
+    rng = np.random.default_rng(2)
+    for _ in range(30):
+        kinds = list(rng.choice(KINDS, size=rng.integers(1, 9)))
+        batch = int(rng.integers(1, 513))
+        assert step_time_s(kinds, batch) \
+            <= step_time_s(kinds, batch, batching="uniform") + 1e-12
+
+
+def test_proportionality_on_mixed_fleet():
+    """Faster devices get proportionally more examples (V100/K80 ~ 3.2x)."""
+    a = allocate(["K80", "V100"], 128)
+    ratio = profile("V100").examples_per_sec / profile("K80").examples_per_sec
+    assert a[1] / max(a[0], 1) == pytest.approx(ratio, rel=0.15)
+
+
+def test_infeasible_batch_raises():
+    with pytest.raises(ValueError, match="memory capacity"):
+        allocate(["K80"], 10_000, caps=np.array([64]))
+    with pytest.raises(ValueError, match="batching"):
+        allocate(["K80"], 8, batching="magic")
+
+
+# ---------------------------------------------------------------------------
+# Fleet-rate model (what the engines integrate)
+# ---------------------------------------------------------------------------
+
+def test_aggregate_rate_modes():
+    r = np.array([4.0, 12.0])
+    assert aggregate_rate(r, "dynamic") == pytest.approx(16.0)
+    assert aggregate_rate(r, "uniform") == pytest.approx(8.0)   # 2 * min
+    # homogeneous fleets agree under both modes
+    h = np.array([4.0, 4.0, 4.0])
+    assert aggregate_rate(h, "dynamic") == aggregate_rate(h, "uniform")
+    assert aggregate_rate(np.empty(0)) == 0.0
+
+
+def test_aggregate_rate_batch_matches_scalar():
+    rate_w = np.array([4.0, 12.0, 6.0])
+    active = np.array([[True, True, False],
+                       [False, False, False],
+                       [True, True, True]])
+    for mode in ("dynamic", "uniform"):
+        got = aggregate_rate_batch(active, rate_w, mode)
+        want = [aggregate_rate(rate_w[row], mode) for row in active]
+        np.testing.assert_allclose(got, want)
+
+
+def test_engine_mixed_fleet_dynamic_beats_uniform():
+    """The acceptance inequality, at the engine level: dynamic batching
+    completes the workload strictly faster than uniform on K80+V100."""
+    dyn = simulate_many(ClusterSpec.mixed({"K80": 2, "V100": 2}),
+                        n_runs=256, seed=7)
+    uni = simulate_many(ClusterSpec.mixed({"K80": 2, "V100": 2},
+                                          batching="uniform"),
+                        n_runs=256, seed=7)
+    assert dyn.n_completed > 0 and uni.n_completed > 0
+    assert dyn.time_h[0] < uni.time_h[0]
+    # uniform runs at the K80s' pace: no faster than an all-K80 fleet
+    k80 = simulate_many(ClusterSpec.homogeneous("K80", 4), n_runs=256,
+                        seed=7)
+    assert uni.time_h[0] >= 0.95 * k80.time_h[0]
+
+
+def test_legacy_engine_agrees_on_mixed_fleet():
+    """Both engines price the same mixed-uniform semantics (statistical
+    agreement; RNG consumption order differs by design)."""
+    spec = ClusterSpec.mixed({"K80": 2, "V100": 2}, batching="uniform")
+    fast = simulate_many(spec, n_runs=512, seed=3)
+    slow = simulate_many(spec, n_runs=256, seed=3, engine="legacy")
+    assert fast.time_h[0] == pytest.approx(slow.time_h[0], rel=0.15)
+    assert abs(fast.failure_rate - slow.failure_rate) < 0.12
+
+
+# ---------------------------------------------------------------------------
+# Runtime allocator over a live SparseCluster
+# ---------------------------------------------------------------------------
+
+def _mixed_cluster():
+    c = SparseCluster(4)
+    c.fill_and_activate(0, 0, kind="K80")
+    c.fill_and_activate(1, 0, kind="V100")
+    return c
+
+
+def test_dynamic_allocator_counts_and_cache():
+    c = _mixed_cluster()
+    alloc = DynamicBatchAllocator(c, global_batch=96, base_workers=2,
+                                  base_kind="K80")
+    a1 = alloc.allocation()
+    assert a1.counts.sum() == 96
+    assert a1.counts[2] == a1.counts[3] == 0          # inactive slots
+    assert a1.counts[1] > a1.counts[0]                # V100 gets more
+    assert alloc.solve_count == 1
+    assert alloc.allocation().membership_version == a1.membership_version
+    assert alloc.solve_count == 1                     # cache hit, no re-solve
+    c.fill_and_activate(2, 1, kind="K80")
+    a2 = alloc.allocation()
+    assert alloc.solve_count == 2                     # membership bump
+    assert a2.counts.sum() == 96 and a2.counts[2] > 0
+
+
+def test_allocator_lr_ratio_generalizes_worker_count():
+    # homogeneous K80 fleet: ratio reduces to n_active / base_workers
+    c = SparseCluster(4)
+    c.fill_and_activate(0, 0, kind="K80")
+    c.fill_and_activate(1, 0, kind="K80")
+    alloc = DynamicBatchAllocator(c, global_batch=64, base_workers=1,
+                                  base_kind="K80")
+    assert alloc.allocation().lr_ratio == pytest.approx(2.0)
+    # mixed fleet: aggregate-throughput ratio, not a worker count
+    cm = _mixed_cluster()
+    am = DynamicBatchAllocator(cm, global_batch=64, base_workers=1,
+                               base_kind="K80")
+    want = (profile("K80").examples_per_sec
+            + profile("V100").examples_per_sec) \
+        / profile("K80").examples_per_sec
+    assert am.allocation().lr_ratio == pytest.approx(want)
+
+
+def test_allocator_clamps_to_fleet_capacity():
+    c = _mixed_cluster()
+    alloc = DynamicBatchAllocator(c, global_batch=10_000, cap_per_slot=8)
+    a = alloc.allocation()
+    assert a.global_batch == 16                       # 2 slots x cap 8
+    assert a.counts.sum() == 16 and a.counts.max() == 8
+
+
+# ---------------------------------------------------------------------------
+# SparseCluster: the region-propagation fix (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_fill_and_activate_propagates_region():
+    c = SparseCluster(2)
+    c.fill_and_activate(0, 0, kind="V100", region="europe-west1")
+    assert c.slots[0].kind == "V100"
+    assert c.slots[0].region == "europe-west1"
+    assert c.active_kinds() == ["V100"]
+    c.fill_and_activate(1, 1, kind="K80")
+    assert c.composition() == {"V100": 1, "K80": 1}
+
+
+# ---------------------------------------------------------------------------
+# Mixed decisions end to end: policy seam + gym differential
+# ---------------------------------------------------------------------------
+
+def test_mixed_decision_validation_and_spec():
+    dec = PolicyDecision.mixed({"K80": 2, "V100": 2})
+    assert dec.label == "2xK80+2xV100+1PS"
+    assert dec.composition() == {"K80": 2, "V100": 2}
+    spec = dec.to_spec(batching="uniform")
+    assert spec.fleet_label() == "2xK80+2xV100"
+    assert spec.batching == "uniform" and spec.n_ps == 1
+    # n_ps parity: a single-worker decision still models its declared PS
+    # (the gym bills it); planners opt out explicitly via the override
+    assert PolicyDecision("K80", 1).to_spec().n_ps == 1
+    assert PolicyDecision("K80", 1).to_spec(n_ps=0).n_ps == 0
+    with pytest.raises(ValueError, match="sum to n_workers"):
+        PolicyDecision("K80", 3, fleet=(("K80", 1), ("V100", 1)))
+    with pytest.raises(ValueError, match="unknown kind"):
+        PolicyDecision.mixed({"TPU9000": 1})
+    with pytest.raises(ValueError, match="unique"):
+        PolicyDecision.mixed((("K80", 1), ("K80", 2)))
+
+
+def test_gym_mixed_episode_validates_against_engine():
+    """ISSUE acceptance: the gym's mixed-kind episode agrees with
+    simulate_many(trace=...) under the existing tolerance contract, in
+    both batching modes, and the ledger breaks cost out per kind."""
+    from repro.gym import TransientGym, differential_validate
+    from repro.core.policy import StaticPolicy
+    from repro.traces.synth import default_trace_suite
+    calm = default_trace_suite(0)[0]
+    dec = PolicyDecision.mixed({"K80": 2, "V100": 2})
+    for mode in ("dynamic", "uniform"):
+        rep = differential_validate(calm, dec, n_gym=16, n_engine=256,
+                                    seed=0, batching=mode)
+        assert rep.ok(), f"{mode}: {rep.failures()}"
+    led = TransientGym(calm, StaticPolicy(dec), seed=0,
+                       batching="uniform").plan()
+    assert set(led.cost_by_kind) == {"K80", "V100", "PS"}
+    assert sum(led.cost_by_kind.values()) == pytest.approx(led.cost_usd)
+    assert all(v >= 0 for v in led.cost_by_kind.values())
+    # ledger rows carry the composition and kind/region per event
+    # (epoch 0 records the pre-activation fleet, so check the next one)
+    assert len(led.epochs) >= 2
+    assert led.epochs[1].n_by_kind == {"K80": 2, "V100": 2}
+    assert all(ev.server_kind in pricing.SERVER_TYPES and ev.region
+               for ev in led.schedule)
+
+
+def test_observation_sees_fleet_composition():
+    from repro.core.policy import make_observation
+    from repro.traces.replay import ReplayContext
+    from repro.traces.synth import default_trace_suite
+    ctx = ReplayContext(default_trace_suite(0)[0], bootstrap="zero")
+    obs = make_observation(ctx, t_s=0.0, steps_done=0.0, total_steps=100,
+                           fleet_by_kind={"K80": 2, "V100": 1})
+    assert obs.fleet_by_kind == {"K80": 2, "V100": 1}
+    # default stays an empty dict, not None
+    obs2 = make_observation(ctx, t_s=0.0, steps_done=0.0, total_steps=100)
+    assert obs2.fleet_by_kind == {}
+
+
+def test_lookahead_scores_mixed_candidates():
+    """LookaheadMC can plan mixed fleets: a mixed candidate is scorable
+    and a candidate set containing one still yields a valid decision."""
+    from repro.core.policy import LookaheadMC, evaluate_policy
+    from repro.traces.synth import default_trace_suite
+    calm = default_trace_suite(0)[0]
+    cands = (PolicyDecision("K80", 4),
+             PolicyDecision.mixed({"K80": 2, "V100": 2}))
+    pol = LookaheadMC(candidates=cands, n_plan_trials=16)
+    out = evaluate_policy(pol, calm, n_trials=16, seed=0)
+    assert out.completion_rate > 0.5
+    assert out.decisions and out.decisions[0][1] in cands

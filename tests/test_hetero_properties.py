@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the dynamic batch allocator (ISSUE
+satellite): allocations sum exactly to the global batch, are
+non-negative, respect memory caps, are deterministic given
+(kinds, global batch), and collapse to uniform when all kinds are equal.
+
+Deterministic spot-checks of the same contract live in test_hetero.py so
+the invariants are exercised even where hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.hetero import allocate, caps_for, step_time_s
+
+KINDS = ("K80", "P100", "V100")
+kinds_strategy = st.lists(st.sampled_from(KINDS), min_size=1, max_size=8)
+
+
+@given(kinds=kinds_strategy, batch=st.integers(0, 512),
+       batching=st.sampled_from(("dynamic", "uniform")))
+@settings(max_examples=100, deadline=None)
+def test_allocation_sums_nonneg_capped_deterministic(kinds, batch, batching):
+    a = allocate(kinds, batch, batching=batching)
+    assert a.sum() == batch                       # exact, no examples lost
+    assert (a >= 0).all()
+    assert (a <= caps_for(kinds)).all()
+    b = allocate(kinds, batch, batching=batching)
+    assert (a == b).all()                         # deterministic
+
+
+@given(kind=st.sampled_from(KINDS), n=st.integers(1, 8),
+       batch=st.integers(0, 512))
+@settings(max_examples=60, deadline=None)
+def test_equal_kinds_collapse_to_uniform(kind, n, batch):
+    """All-equal fleets split evenly (+-1 from integer rounding, resolved
+    by slot index) under BOTH batching modes."""
+    for batching in ("dynamic", "uniform"):
+        a = allocate([kind] * n, batch, batching=batching)
+        assert a.max() - a.min() <= 1
+        assert list(a) == sorted(a, reverse=True)   # earlier slots first
+
+
+@given(kinds=kinds_strategy, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_allocation_respects_custom_caps(kinds, data):
+    caps = np.array([data.draw(st.integers(1, 64)) for _ in kinds])
+    batch = data.draw(st.integers(0, int(caps.sum())))
+    a = allocate(kinds, batch, caps=caps)
+    assert a.sum() == batch and (a >= 0).all() and (a <= caps).all()
+
+
+@given(kinds=kinds_strategy, batch=st.integers(1, 512))
+@settings(max_examples=60, deadline=None)
+def test_dynamic_never_slower_than_uniform(kinds, batch):
+    """T_step = max_k(alloc_k/rate_k): the proportional allocation is the
+    minimizer, so dynamic step time <= uniform step time, always."""
+    assert step_time_s(kinds, batch) \
+        <= step_time_s(kinds, batch, batching="uniform") + 1e-12

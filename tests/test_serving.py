@@ -75,6 +75,43 @@ def test_slot_reuse_is_clean(setup):
     assert second.generated == probe.generated
 
 
+def test_membership_shrink_mid_serve(setup):
+    """A replica revoked mid-decode (the serving analogue of a training
+    slot revocation) loses only its in-flight tokens: the request is
+    re-enqueued, regenerates from scratch on a clean row via the same
+    masked-slot machinery, and its output matches an undisturbed solo
+    decode — revocation costs work, never correctness."""
+    cfg, model, params = setup
+    reqs = _reqs(cfg, 3, seed=5, max_new=8)
+    eng = ServeEngine(model, params, max_batch=2, max_len=32)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(7):                  # past prefill (5), into decode
+        eng.step()
+    victim = eng.slots[0]
+    assert victim is not None and victim.generated   # genuinely in flight
+    displaced = eng.revoke_slot(0)
+    assert displaced is victim and not victim.done
+    assert eng.slots[0] is None                      # row masked out
+    assert eng._pending[0] is victim                 # front of the queue
+    eng.run_to_completion()
+    assert all(r.done and len(r.generated) == 8 for r in reqs)
+    # outputs identical to undisturbed solo decodes (state hygiene)
+    for ref in _reqs(cfg, 3, seed=5, max_new=8):
+        solo = ServeEngine(model, params, max_batch=1, max_len=32)
+        solo.submit(ref)
+        solo.run_to_completion()
+        got = next(r for r in reqs if r.rid == ref.rid)
+        assert got.generated == ref.generated
+
+
+def test_revoke_empty_slot_is_noop(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=16)
+    assert eng.revoke_slot(1) is None
+    assert not eng.has_work()
+
+
 def test_eos_early_stop(setup):
     cfg, model, params = setup
     eng = ServeEngine(model, params, max_batch=1, max_len=64)
