@@ -1,0 +1,115 @@
+"""Pipeline perf trajectory: wall time of the simulation-stack hot loops —
+batched MC engine, trace replay, online-policy evaluation, plan-only gym
+episodes — emitted as ``BENCH_pipeline.json`` with the same ``norm_wall``
+machine-speed normalization as ``kernel_bench`` so the trajectory test can
+hold a 25% tolerance band across machines.
+
+    PYTHONPATH=src python -m benchmarks.pipeline_bench [--smoke]
+
+These loops are pure NumPy/Python (no jax), so ``calib`` here is a fixed
+NumPy workload, not the jax matmul: it tracks the interpreter+BLAS speed
+the loops actually run on.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit
+
+REPS = 3
+
+
+def _time(fn: Callable[[], object], reps: int = REPS) -> float:
+    fn()                                     # warm caches / lazy imports
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibration_s() -> float:
+    """Fixed NumPy workload: matmul + RNG draw, the two primitives the
+    vectorized engine spends its time in."""
+    rng = np.random.default_rng(0)
+
+    def work():
+        a = rng.normal(size=(256, 256))
+        return (a @ a).sum()
+
+    return _time(work, reps=5)
+
+
+def _cases(smoke: bool) -> List[Tuple[str, Callable[[], object]]]:
+    from repro.core.policy import GreedyCheapest, StaticPolicy, \
+        PolicyDecision, evaluate_policy
+    from repro.core.simulator import ClusterSpec, simulate_many
+    from repro.gym import TransientGym
+    from repro.traces.synth import default_trace_suite
+
+    n_mc = 256 if smoke else 1024
+    n_pol = 32 if smoke else 128
+    n_gym = 4 if smoke else 16
+    trace = default_trace_suite(0)[0]                      # calm
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True)
+
+    def mc_batched():
+        return simulate_many(spec, n_runs=n_mc, seed=1)
+
+    def mc_legacy():
+        return simulate_many(spec, n_runs=8, seed=1, engine="legacy")
+
+    def trace_replay():
+        return simulate_many(spec, n_runs=n_mc, seed=1, trace=trace)
+
+    def policy_eval():
+        return evaluate_policy(GreedyCheapest(4), trace, n_trials=n_pol,
+                               seed=1)
+
+    def gym_plan():
+        ledgers = []
+        for s in range(n_gym):
+            gym = TransientGym(trace, StaticPolicy(PolicyDecision("K80", 4)),
+                               seed=s)
+            ledgers.append(gym.plan())
+        return ledgers
+
+    return [
+        (f"mc_batched/{n_mc}", mc_batched),
+        ("mc_legacy/8", mc_legacy),
+        (f"trace_replay/{n_mc}", trace_replay),
+        (f"policy_eval/greedy{n_pol}", policy_eval),
+        (f"gym_plan/{n_gym}", gym_plan),
+    ]
+
+
+def collect(smoke: bool) -> Tuple[List[Dict], Dict]:
+    calib = calibration_s()
+    meta = {"calib_ms": calib * 1e3, "smoke": smoke}
+    rows: List[Dict] = []
+    entries: Dict[str, Dict] = {}
+    for label, fn in _cases(smoke):
+        wall = _time(fn)
+        entries[label] = {"wall_ms": wall * 1e3, "norm_wall": wall / calib}
+        rows.append({"loop": label, "wall_ms": f"{wall*1e3:.2f}",
+                     "norm_wall": f"{wall/calib:.1f}"})
+    return rows, {"meta": meta, "entries": entries}
+
+
+def run(smoke: bool = False) -> dict:
+    smoke = smoke or os.environ.get("PIPELINE_BENCH_SMOKE", "") == "1"
+    rows, stats = collect(smoke)
+    mode = "smoke" if smoke else "full"
+    notes = (f"[{mode}] calib={stats['meta']['calib_ms']:.3f}ms — "
+             "norm_wall = wall / calib is what the trajectory test bands")
+    return emit("BENCH_pipeline", rows, notes=notes, stats=stats)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

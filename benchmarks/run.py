@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
                         fig8_geo_distributed, frontier, gym_replay,
-                        policy_replay, roofline_report, selective_revocation,
+                        kernel_bench, pipeline_bench, policy_replay,
+                        roofline_report, selective_revocation,
                         staleness_accuracy, table1_transient_vs_ondemand,
                         table3_scale_up_vs_out, table4_revocation_overhead,
                         table5_ondemand_comparison, table6_heterogeneous)
@@ -29,6 +30,8 @@ MODULES = {
     "fig8": fig8_geo_distributed,
     "frontier": frontier,
     "gym": gym_replay,
+    "kernels": kernel_bench,
+    "pipeline": pipeline_bench,
     "policy": policy_replay,
     "staleness": staleness_accuracy,
     "selective": selective_revocation,

@@ -1,0 +1,103 @@
+"""Version-adaptive shim over the jax APIs the Pallas kernels need.
+
+jax renamed two things the kernels depend on between the 0.4.x line this
+container pins and the 0.5 line the kernels were written against:
+
+    pltpu.TPUCompilerParams   (0.4.x)  ->  pltpu.CompilerParams   (>=0.5)
+    jax.experimental.shard_map.shard_map (0.4.x, check_rep=)
+                              ->  jax.shard_map (>=0.5, check_vma=)
+
+Every kernel subpackage (and the shard_map MoE paths in models/ffn.py)
+routes through this module instead of touching either spelling directly,
+so the same source compiles on both toolchains. Resolution happens at
+*call* time, not import time: importing ``repro.kernels`` can never raise
+an ``AttributeError`` on a jax we don't know — an unresolvable API
+surfaces as an explicit :class:`UnsupportedJaxError` with both spellings
+named, exactly when (and only when) a kernel is actually launched.
+
+The ``pltpu_module`` / ``jax_module`` injection points exist for the
+compat matrix tests, which sweep every API-presence combination without
+needing three jax installs.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional
+
+
+class UnsupportedJaxError(RuntimeError):
+    """The installed jax exposes neither the old nor the new spelling of a
+    required API. Carries both names so the failure is actionable."""
+
+
+# ---------------------------------------------------------------------------
+# pltpu.CompilerParams vs pltpu.TPUCompilerParams
+# ---------------------------------------------------------------------------
+
+def compiler_params_cls(pltpu_module: Optional[Any] = None):
+    """The Mosaic compiler-params class under whichever name exists."""
+    if pltpu_module is None:
+        from jax.experimental.pallas import tpu as pltpu_module
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu_module, name, None)
+        if cls is not None:
+            return cls
+    raise UnsupportedJaxError(
+        "installed jax exposes neither pallas.tpu.CompilerParams (jax>=0.5) "
+        "nor pallas.tpu.TPUCompilerParams (jax 0.4.x); the Pallas kernels "
+        "cannot build their grids on this toolchain")
+
+
+def compiler_params(pltpu_module: Optional[Any] = None, **kwargs):
+    """Instantiate compiler params, e.g.
+    ``compat.compiler_params(dimension_semantics=("parallel", "arbitrary"))``.
+    """
+    return compiler_params_cls(pltpu_module)(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# jax.shard_map vs jax.experimental.shard_map.shard_map
+# ---------------------------------------------------------------------------
+
+def shard_map_fn(jax_module: Optional[Any] = None):
+    """The shard_map callable under whichever spelling exists."""
+    if jax_module is None:
+        import jax as jax_module
+    fn = getattr(jax_module, "shard_map", None)
+    if fn is not None:
+        return fn
+    exp = getattr(jax_module, "experimental", None)
+    mod = getattr(exp, "shard_map", None) if exp is not None else None
+    if mod is None and exp is not None:
+        try:  # submodule may simply not be imported yet
+            import importlib
+            mod = importlib.import_module(
+                jax_module.__name__ + ".experimental.shard_map")
+        except ImportError:
+            mod = None
+    fn = getattr(mod, "shard_map", None)
+    if fn is not None:
+        return fn
+    raise UnsupportedJaxError(
+        "installed jax exposes neither jax.shard_map (jax>=0.5) nor "
+        "jax.experimental.shard_map.shard_map (jax 0.4.x); the expert-"
+        "parallel MoE paths cannot run on this toolchain")
+
+
+def shard_map(f, mesh, *, in_specs, out_specs, check_vma: Optional[bool] = None,
+              jax_module: Optional[Any] = None):
+    """Call shard_map with replication checking spelled for the installed
+    jax: ``check_vma`` (>=0.5) is translated to ``check_rep`` (0.4.x); a
+    signature with neither drops the flag rather than erroring."""
+    fn = shard_map_fn(jax_module)
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if check_vma is not None:
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if "check_vma" in params:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in params:
+            kwargs["check_rep"] = check_vma
+    return fn(f, **kwargs)

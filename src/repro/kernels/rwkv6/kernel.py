@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
                   o_ref, sout_ref, state_ref, *, chunk: int):
@@ -103,7 +105,7 @@ def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_shape=(jax.ShapeDtypeStruct((B, H, S, D), jnp.float32),
                    jax.ShapeDtypeStruct((B, H, D, D), jnp.float32)),
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u, s0)

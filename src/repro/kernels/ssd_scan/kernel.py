@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _ssd_kernel(xdt_ref, b_ref, c_ref, da_ref, y_ref, state_ref, *, chunk: int):
     ci = pl.program_id(2)
@@ -97,7 +99,7 @@ def ssd_scan(xdt: jax.Array, Bc: jax.Array, Cc: jax.Array, dA: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, S, P), xdt.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xdt, Bc, Cc, dA)

@@ -253,6 +253,60 @@ class RooflineReport:
         return d
 
 
+# ---------------------------------------------------------------------------
+# Kernel-level roofline (the BENCH_kernels.json normalizer)
+# ---------------------------------------------------------------------------
+# The per-model RooflineReport above is derived from a compiled HLO module;
+# a single kernel's analytic roofline needs no compiler: the bench layer
+# hands us closed-form FLOPs and HBM bytes per (kernel, shape) and we apply
+# the same three-term model against the v5e-class constants. Measured wall
+# time is then reported as ``achieved_fraction`` = t_bound / t_measured —
+# 1.0 means the kernel runs at the analytic roof, and the number is
+# comparable across device kinds once the constants are swapped per kind
+# (how the heterogeneity layer's DeviceProfiles will eventually be fed from
+# measurement instead of Table I/III).
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    flops: float                     # useful math, closed form
+    hbm_bytes: float                 # mandatory HBM traffic (in + out)
+    wire_bytes: float = 0.0          # 0 for single-device kernels
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def achieved_fraction(self, measured_s: float) -> float:
+        """Fraction of the analytic roofline the measured wall time hits."""
+        if measured_s <= 0:
+            return 0.0
+        return self.t_bound / measured_s
+
+
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    wire_bytes: float = 0.0) -> KernelRoofline:
+    return KernelRoofline(flops=flops, hbm_bytes=hbm_bytes,
+                          wire_bytes=wire_bytes)
+
+
 def model_flops(param_count: int, active_param_count: int, tokens: int,
                 kind: str) -> float:
     """6 N D (training) / 2 N D (inference) with N = active params."""

@@ -21,10 +21,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.builder import Model
+from repro.models.builder import Model, build_model
 from repro.train.step import make_serve_step
 
 PyTree = dict
+
+
+def with_impls(model: Model, **impls: str) -> Model:
+    """Rebuild a model with different kernel implementations selected, e.g.
+    ``with_impls(model, attn_impl="pallas")``. The params pytree is layout-
+    identical across impls (only the compute path changes), so the caller's
+    params keep working. On CPU the Pallas paths run in interpret mode
+    (the ops wrappers check ``jax.default_backend()``), so this is safe to
+    flip anywhere — kernel-accurate semantics, hardware speed only on TPU.
+    """
+    return build_model(model.cfg.replace(**impls))
 
 
 @dataclasses.dataclass
@@ -40,7 +51,11 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, *, max_batch: int,
-                 max_len: int):
+                 max_len: int, attn_impl: Optional[str] = None):
+        if attn_impl is not None and attn_impl != model.cfg.attn_impl:
+            # Serving hot path: flip decode attention onto the Pallas kernel
+            # (or back to xla) without asking callers to rebuild the model.
+            model = with_impls(model, attn_impl=attn_impl)
         self.model = model
         self.params = params
         self.max_batch = max_batch

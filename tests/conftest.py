@@ -14,3 +14,7 @@ def pytest_addoption(parser):
         "--update-goldens", action="store_true", default=False,
         help="rewrite tests/goldens/*.json from current benchmark stats "
              "(see tests/test_goldens.py)")
+    parser.addoption(
+        "--update-bench-baseline", action="store_true", default=False,
+        help="rewrite bench/BENCH_*.json perf baselines from a fresh smoke "
+             "run (see tests/test_bench_trajectory.py)")

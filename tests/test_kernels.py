@@ -4,17 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.experimental.pallas import tpu as pltpu
 
-# Every kernel builds its grid with pltpu.CompilerParams (jax >= 0.5); on
-# the 0.4.x toolchain that attribute is still TPUCompilerParams, so the
-# whole sweep is a known incompatibility, not a regression. Explicit skip
-# instead of CI-level --ignore so collection stays honest (ISSUE 2).
-pytestmark = pytest.mark.skipif(
-    not hasattr(pltpu, "CompilerParams"),
-    reason="kernels use pltpu.CompilerParams (jax>=0.5); installed jax "
-           "predates it")
-
+# kernels/compat.py resolves pltpu.CompilerParams vs TPUCompilerParams and
+# jax.shard_map vs jax.experimental.shard_map at call time, so these sweeps
+# run un-skipped on both the 0.4.x and >=0.5 toolchains (ISSUE 6).
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention

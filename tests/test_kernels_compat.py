@@ -1,0 +1,142 @@
+"""kernels/compat.py matrix: every API-presence combination must resolve
+to the right object or raise a clear UnsupportedJaxError — never leak a
+bare AttributeError at import or call time."""
+import types
+
+import pytest
+
+from repro.kernels import compat
+
+
+class _NewCP:
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+class _OldCP:
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+def _pltpu(**attrs):
+    return types.SimpleNamespace(**attrs)
+
+
+# --- CompilerParams vs TPUCompilerParams -----------------------------------
+
+def test_compiler_params_new_name():
+    mod = _pltpu(CompilerParams=_NewCP)
+    assert compat.compiler_params_cls(mod) is _NewCP
+
+
+def test_compiler_params_old_name():
+    mod = _pltpu(TPUCompilerParams=_OldCP)
+    assert compat.compiler_params_cls(mod) is _OldCP
+
+
+def test_compiler_params_prefers_new_when_both():
+    mod = _pltpu(CompilerParams=_NewCP, TPUCompilerParams=_OldCP)
+    assert compat.compiler_params_cls(mod) is _NewCP
+
+
+def test_compiler_params_neither_raises_unsupported():
+    mod = _pltpu()
+    with pytest.raises(compat.UnsupportedJaxError, match="CompilerParams"):
+        compat.compiler_params_cls(mod)
+
+
+def test_compiler_params_instantiates_with_kwargs():
+    mod = _pltpu(TPUCompilerParams=_OldCP)
+    cp = compat.compiler_params(mod, dimension_semantics=("parallel",))
+    assert cp.kw == {"dimension_semantics": ("parallel",)}
+
+
+def test_compiler_params_resolves_on_installed_jax():
+    """Whatever jax the container has, the shim must find a real class."""
+    cp = compat.compiler_params(dimension_semantics=("parallel", "arbitrary"))
+    assert cp is not None
+
+
+# --- jax.shard_map vs jax.experimental.shard_map ---------------------------
+
+def _fake_jax(top=None, experimental=None):
+    ns = types.SimpleNamespace(__name__="fakejax")
+    if top is not None:
+        ns.shard_map = top
+    if experimental is not None:
+        ns.experimental = experimental
+    return ns
+
+
+def test_shard_map_new_spelling_gets_check_vma():
+    seen = {}
+
+    def sm(f, *, mesh, in_specs, out_specs, check_vma=True):
+        seen.update(mesh=mesh, check_vma=check_vma)
+        return f
+
+    fn = compat.shard_map(lambda x: x, "MESH", in_specs=(), out_specs=(),
+                          check_vma=False, jax_module=_fake_jax(top=sm))
+    assert callable(fn)
+    assert seen == {"mesh": "MESH", "check_vma": False}
+
+
+def test_shard_map_old_spelling_translates_to_check_rep():
+    seen = {}
+
+    def sm(f, *, mesh, in_specs, out_specs, check_rep=True):
+        seen.update(check_rep=check_rep)
+        return f
+
+    exp = types.SimpleNamespace(shard_map=types.SimpleNamespace(shard_map=sm))
+    compat.shard_map(lambda x: x, "MESH", in_specs=(), out_specs=(),
+                     check_vma=False, jax_module=_fake_jax(experimental=exp))
+    assert seen == {"check_rep": False}
+
+
+def test_shard_map_unknown_signature_drops_flag():
+    seen = {}
+
+    def sm(f, *, mesh, in_specs, out_specs):
+        seen["called"] = True
+        return f
+
+    compat.shard_map(lambda x: x, "MESH", in_specs=(), out_specs=(),
+                     check_vma=False, jax_module=_fake_jax(top=sm))
+    assert seen == {"called": True}
+
+
+def test_shard_map_prefers_top_level_spelling():
+    def top(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return "top"
+
+    def old(f, *, mesh, in_specs, out_specs, check_rep=True):
+        return "old"
+
+    exp = types.SimpleNamespace(shard_map=types.SimpleNamespace(shard_map=old))
+    got = compat.shard_map_fn(_fake_jax(top=top, experimental=exp))
+    assert got is top
+
+
+def test_shard_map_neither_raises_unsupported():
+    with pytest.raises(compat.UnsupportedJaxError, match="shard_map"):
+        compat.shard_map_fn(_fake_jax())
+    # experimental exists but has no shard_map submodule either
+    exp = types.SimpleNamespace()
+    with pytest.raises(compat.UnsupportedJaxError, match="shard_map"):
+        compat.shard_map_fn(_fake_jax(experimental=exp))
+
+
+def test_shard_map_resolves_on_installed_jax():
+    assert callable(compat.shard_map_fn())
+
+
+# --- import-time safety -----------------------------------------------------
+
+def test_kernel_subpackages_import_without_version_gates():
+    """The whole point of the shim: importing every kernel subpackage is
+    version-independent; resolution only happens when a kernel launches."""
+    import repro.kernels.decode_attention  # noqa: F401
+    import repro.kernels.flash_attention  # noqa: F401
+    import repro.kernels.rwkv6  # noqa: F401
+    import repro.kernels.ssd_scan  # noqa: F401

@@ -14,14 +14,9 @@ from repro.sharding import param_spec, use_mesh
 
 ARCHS = ("moonshot-v1-16b-a3b", "arctic-480b")
 
-# The ep/a2a MoE paths call jax.shard_map, promoted out of
-# jax.experimental in jax >= 0.5; on the 0.4.x toolchain the attribute
-# does not exist. Known incompatibility — explicit skip instead of a
-# CI-level --ignore so the remaining layout tests keep running (ISSUE 2).
-needs_shard_map = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="moe_impl='ep'/'a2a' need jax.shard_map (jax>=0.5); installed "
-           "jax only has jax.experimental.shard_map")
+# The ep/a2a MoE paths route shard_map through kernels/compat.py, which
+# resolves jax.shard_map (>=0.5) vs jax.experimental.shard_map (0.4.x) and
+# translates check_vma<->check_rep — so these run on both toolchains.
 
 
 @pytest.fixture(scope="module")
@@ -29,7 +24,6 @@ def mesh():
     return single_device_mesh()
 
 
-@needs_shard_map
 @pytest.mark.parametrize("arch", ARCHS)
 def test_ep_matches_gspmd(arch, mesh):
     cfg = get_config(arch, reduced=True).replace(dtype="float32")
@@ -46,7 +40,6 @@ def test_ep_matches_gspmd(arch, mesh):
     assert abs(float(ax) - float(ap)) < 1e-5
 
 
-@needs_shard_map
 @pytest.mark.parametrize("arch", ARCHS)
 def test_a2a_matches_gspmd(arch, mesh):
     # B=1 so the per-rank token pool equals the gspmd per-row pool exactly
@@ -74,7 +67,6 @@ def test_a2a_falls_back_outside_mesh():
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 
-@needs_shard_map
 def test_a2a_is_differentiable(mesh):
     cfg = get_config("moonshot-v1-16b-a3b",
                      reduced=True).replace(dtype="float32", moe_impl="a2a")
