@@ -20,14 +20,21 @@ def fmt_ms(mean: float, std: float = None) -> str:
 
 
 def emit(name: str, rows: List[Dict], notes: str = "",
-         stats: Dict = None) -> Dict:
+         stats=None) -> Dict:
     """Print a benchmark's table and persist its JSON artifact.
 
     ``stats`` is the machine-readable side channel: raw numeric summary
     stats (typically ``Summary.stats()`` dicts keyed by row label) that
     golden-file regression tests pin with relative tolerance — the
     formatted ``rows`` stay free to change without breaking goldens.
+    An ``obs.MetricsRegistry`` is accepted directly and flattened to the
+    same Prometheus-style ``name{labels}`` -> float schema the registry's
+    ``to_stats`` defines, so instrumented benchmarks persist their metrics
+    without a bespoke conversion.
     """
+    from repro.obs.export import metrics_stats
+
+    stats = metrics_stats(stats) if stats is not None else {}
     os.makedirs(OUT_DIR, exist_ok=True)
     print(f"\n=== {name} ===")
     if notes:
@@ -40,7 +47,7 @@ def emit(name: str, rows: List[Dict], notes: str = "",
         for r in rows:
             print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
     payload = {"name": name, "rows": rows, "notes": notes,
-               "stats": stats or {}, "time": time.time()}
+               "stats": stats, "time": time.time()}
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1)
     return payload

@@ -33,6 +33,8 @@ from benchmarks.common import emit
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+from repro.obs.export import perf_entry
 from repro.roofline import kernel_roofline
 
 REPS = 5
@@ -159,7 +161,8 @@ def _cases(smoke: bool) -> List[Case]:
     ]
 
 
-def collect(smoke: bool) -> Tuple[List[Dict], Dict]:
+def collect(smoke: bool, recorder=None) -> Tuple[List[Dict], Dict]:
+    rec = recorder if recorder is not None else obs.NULL
     calib = calibration_s()
     dev = jax.devices()[0]
     meta = {
@@ -176,16 +179,22 @@ def collect(smoke: bool) -> Tuple[List[Dict], Dict]:
         t_ref = _time(ref)
         t_pal = _time(pallas)
         for impl, wall in (("pallas", t_pal), ("ref", t_ref)):
-            entries[f"{label}/{impl}"] = {
-                "wall_ms": wall * 1e3,
-                "norm_wall": wall / calib,
-                "flops": flops,
-                "hbm_bytes": hbm_bytes,
-                "t_roofline_ms": roof.t_bound * 1e3,
-                "roofline_frac": roof.achieved_fraction(wall),
-                "bottleneck": roof.bottleneck,
-                "speedup_vs_ref": t_ref / wall,
-            }
+            entries[f"{label}/{impl}"] = perf_entry(
+                wall, calib, flops=flops, hbm_bytes=hbm_bytes,
+                roofline_s=roof.t_bound,
+                roofline_frac=roof.achieved_fraction(wall),
+                bottleneck=roof.bottleneck,
+                speedup_vs_ref=t_ref / wall)
+            if rec.enabled:
+                # best-of-reps wall as a span: the timeline shows each
+                # case's measured kernel time, not the harness overhead
+                t_now = rec.now()
+                rec.span_at(f"kernel.{label}.{impl}", cat=obs.CAT_BENCH,
+                            track=label.split("/")[0], t_wall=t_now,
+                            dur_wall=wall, norm_wall=wall / calib,
+                            roofline_frac=roof.achieved_fraction(wall))
+                rec.metrics.histogram("kernel_wall_ms",
+                                      impl=impl).observe(wall * 1e3)
         rows.append({
             "kernel": label,
             "ref_ms": f"{t_ref*1e3:.3f}",
@@ -198,17 +207,31 @@ def collect(smoke: bool) -> Tuple[List[Dict], Dict]:
     return rows, {"meta": meta, "entries": entries}
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, events: str = None) -> dict:
     smoke = smoke or os.environ.get("KERNEL_BENCH_SMOKE", "") == "1"
-    rows, stats = collect(smoke)
+    rec = obs.Recorder(meta={"bench": "kernels", "smoke": smoke}) \
+        if events else None
+    rows, stats = collect(smoke, recorder=rec)
     mode = "smoke" if smoke else "full"
     notes = (f"[{mode}] backend={stats['meta']['backend']} "
              f"interpret={stats['meta']['interpret']} "
              f"calib={stats['meta']['calib_ms']:.3f}ms — pallas wall times "
              "are interpret-mode on CPU (semantics, not speed); "
              "roofline_frac is vs the v5e-class analytic bound")
+    if rec is not None:
+        rec.flush(events)
+        from repro.obs.export import write_chrome_trace
+        write_chrome_trace(rec.events, events + ".trace.json", clock="wall",
+                           meta=rec.meta)
+        print(f"[obs] events -> {events}; timeline -> {events}.trace.json")
     return emit("BENCH_kernels", rows, notes=notes, stats=stats)
 
 
+def _cli_events(argv) -> str:
+    if "--events" in argv:
+        return argv[argv.index("--events") + 1]
+    return None
+
+
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv)
+    run(smoke="--smoke" in sys.argv, events=_cli_events(sys.argv))

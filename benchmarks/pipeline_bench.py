@@ -90,13 +90,15 @@ def _cases(smoke: bool) -> List[Tuple[str, Callable[[], object]]]:
 
 
 def collect(smoke: bool) -> Tuple[List[Dict], Dict]:
+    from repro.obs.export import perf_entry
+
     calib = calibration_s()
     meta = {"calib_ms": calib * 1e3, "smoke": smoke}
     rows: List[Dict] = []
     entries: Dict[str, Dict] = {}
     for label, fn in _cases(smoke):
         wall = _time(fn)
-        entries[label] = {"wall_ms": wall * 1e3, "norm_wall": wall / calib}
+        entries[label] = perf_entry(wall, calib)
         rows.append({"loop": label, "wall_ms": f"{wall*1e3:.2f}",
                      "norm_wall": f"{wall/calib:.1f}"})
     return rows, {"meta": meta, "entries": entries}

@@ -33,10 +33,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import ModelConfig, TrainConfig
 from repro.core.cluster import SparseCluster
 from repro.models import modality
 from repro.models.builder import Model
+from repro.obs.profiling import annotate_span
 from repro.train.step import TrainState, cross_entropy, _token_weights
 
 PyTree = Any
@@ -82,11 +84,16 @@ def _apply_grads(state: TrainState, grads, lr_scale, tcfg: TrainConfig,
                  opt, sched, metrics) -> Tuple[TrainState, Dict]:
     from repro.optim.optimizers import clip_by_global_norm, global_norm
 
-    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-    if tcfg.optimizer.grad_clip > 0:
-        grads, gnorm = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
-    else:
-        gnorm = global_norm(grads)
+    # named for device traces: this is the gradient-aggregation region —
+    # under SPMD lowering the cross-replica reduction sits here, which is
+    # exactly the PS-bottleneck communication the paper's Fig 6 measures
+    with annotate_span(obs.EV_ALLREDUCE):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if tcfg.optimizer.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads,
+                                               tcfg.optimizer.grad_clip)
+        else:
+            gnorm = global_norm(grads)
     lr = tcfg.optimizer.lr * sched(state.step) * lr_scale
     updates, new_opt = opt.update(grads, state.opt, state.params, lr)
     new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
@@ -239,7 +246,8 @@ class ElasticRuntime:
     """
 
     def __init__(self, model: Model, tcfg: TrainConfig, dataset,
-                 cluster: SparseCluster, ckpt=None, allocator=None):
+                 cluster: SparseCluster, ckpt=None, allocator=None,
+                 recorder: Optional[obs.Recorder] = None):
         self.model = model
         self.tcfg = tcfg
         self.dataset = dataset
@@ -248,6 +256,8 @@ class ElasticRuntime:
         # allocator (hetero.DynamicBatchAllocator): per-slot example counts
         # re-solved on membership bumps; None = homogeneous masked mode
         self.allocator = allocator
+        self.rec = recorder if recorder is not None else obs.NULL
+        self.mode = "masked" if allocator is None else "hetero"
         if allocator is None:
             self.step_fn = jax.jit(make_masked_train_step(model, tcfg))
         else:
@@ -261,26 +271,44 @@ class ElasticRuntime:
             self.events.setdefault(e.step, []).append(e)
 
     def _apply_events(self, state: TrainState, step: int) -> None:
+        rec = self.rec
         for e in self.events.get(step, ()):
+            # training's sim clock is the step index: membership events
+            # share an axis with the EV_STEP spans in the timeline
             if e.kind == "warn":
+                rec.instant(obs.EV_REVOKE_WARN, cat=obs.CAT_TRAIN,
+                            track=f"slot{e.slot}", sim_t=float(step),
+                            kind=e.server_kind, region=e.region,
+                            fast_save=self.ckpt is not None)
                 if self.ckpt is not None:       # 30 s window: one fsync'd copy
                     self.ckpt.save(step, state, fast=True,
                                    extra={"reason": "revocation_warning",
                                           "slot": e.slot})
                     self.fast_saves += 1
+                    rec.metrics.counter("fast_saves_total").inc()
             elif e.kind == "revoke":
+                rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_TRAIN,
+                            track=f"slot{e.slot}", sim_t=float(step),
+                            kind=e.server_kind, region=e.region)
+                rec.metrics.counter("revocations_total", kind=e.server_kind,
+                                    region=e.region).inc()
                 self.cluster.revoke(e.slot, step)
             elif e.kind == "join":
+                rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_TRAIN,
+                            track=f"slot{e.slot}", sim_t=float(step),
+                            kind=e.server_kind, region=e.region)
                 self.cluster.fill_and_activate(e.slot, step,
                                                kind=e.server_kind,
                                                region=e.region)
 
     def run(self, state: TrainState, num_steps: int, start_step: int = 0
             ) -> TrainState:
+        rec = self.rec
         for step in range(start_step, start_step + num_steps):
             self._apply_events(state, step)
             if self.cluster.n_active == 0:
                 raise RuntimeError(f"no active workers at step {step}")
+            t0 = rec.now()
             batch, mask = slot_batch(self.model.cfg, self.dataset, step,
                                      self.cluster)
             if self.allocator is not None:
@@ -292,9 +320,23 @@ class ElasticRuntime:
                                         jnp.float32(alloc.lr_ratio))
             else:
                 state, m = self.step_fn(state, batch, mask)
+            loss = float(m["loss"])
+            n_active = int(m["active"])
             self.metrics_log.append(
-                {"step": step, "loss": float(m["loss"]),
-                 "active": int(m["active"]), "lr": float(m["lr"])})
+                {"step": step, "loss": loss,
+                 "active": n_active, "lr": float(m["lr"])})
+            if rec.enabled:
+                dt = rec.now() - t0
+                rec.span_at(obs.EV_STEP, cat=obs.CAT_TRAIN,
+                            t_wall=t0, dur_wall=dt,
+                            sim_t=float(step), dur_sim=1.0,
+                            loss=loss, n_active=n_active, mode=self.mode)
+                rec.metrics.counter("steps_total", mode=self.mode).inc()
+                rec.metrics.histogram("step_latency_ms").observe(dt * 1e3)
+                rec.metrics.gauge("workers", mode=self.mode).set(n_active)
+                if self.allocator is not None:
+                    rec.metrics.gauge("examples_per_step").set(
+                        float(m["examples"]))
             if (self.ckpt is not None and self.tcfg.checkpoint_every
                     and (step + 1) % self.tcfg.checkpoint_every == 0):
                 self.ckpt.save(step + 1, state)

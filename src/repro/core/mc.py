@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import pricing
 from repro.core.simulator import (ACC_ANCHORS, JOIN_OVERHEAD_S,
                                   PS_CONTENTION_K, PS_RATE_STEPS_S,
@@ -227,7 +228,8 @@ def summarize_batch(batch: MCBatch):
 
 def simulate_batch(spec: ClusterSpec, n_trials: int,
                    rng: np.random.Generator, *,
-                   replay=None) -> MCBatch:
+                   replay=None, recorder=None,
+                   record_trials: int = 4) -> MCBatch:
     """Run ``n_trials`` independent Monte-Carlo trials of ``spec``, batched.
 
     Equivalent to ``[simulate_run(spec, rng) for _ in range(n_trials)]`` up
@@ -239,12 +241,21 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
     window's observed revocations, and transient servers bill against the
     trace's piecewise-constant spot-price path instead of the static book
     price. With ``replay=None`` behaviour is unchanged.
+
+    ``recorder`` (an ``obs.Recorder``) attaches observability: aggregate
+    counters over ALL trials plus full per-trial event streams (tracks
+    ``trial0..``) for the first ``record_trials`` trials — recording every
+    trial of a 1024-trial sweep would dwarf the simulation itself, so the
+    stream is a sampled subset while the counters stay exact.
     """
     if n_trials <= 0:
         raise ValueError(f"n_trials must be positive, got {n_trials}")
     N, W = n_trials, len(spec.workers)
     if W == 0:
         raise ValueError("spec has no workers")
+    rec = recorder if recorder is not None else obs.NULL
+    n_rec = min(record_trials, N) if rec.enabled else 0
+    kind_w = [w.kind for w in spec.workers]
 
     bound = replay.bind(N, rng) if replay is not None else None
 
@@ -339,15 +350,34 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
         finite = np.isfinite(dt)
         steps += np.where(finite, rate * dt, 0.0)
         worker_int += np.where(finite, n_active * dt, 0.0)
+        t_prev = t if n_rec == 0 else t.copy()
         t = np.where(m & finite, t_next, t)
+
+        if n_rec:       # sampled trial streams: constant-rate segments
+            for i in range(n_rec):
+                if m[i] and finite[i] and dt[i] > 0 and rate[i] > 0:
+                    rec.sim_span(obs.EV_STEP, cat=obs.CAT_SIM,
+                                 track=f"trial{i}", t0=float(t_prev[i]),
+                                 t1=float(t[i]), rate=float(rate[i]),
+                                 n_active=float(n_active[i]))
 
         # --- apply events, masked per type -----------------------------
         done = m & (ev == _EV_DONE)
         steps[done] = total
         status[done] = COMPLETED
+        if n_rec:
+            for i in np.nonzero(done[:n_rec])[0]:
+                rec.instant(obs.EV_TRIAL_DONE, cat=obs.CAT_SIM,
+                            track=f"trial{i}", sim_t=float(t[i]),
+                            steps=float(total))
 
         psk = m & (ev == _EV_PS)
         status[psk] = PS_REVOKED
+        if n_rec:
+            for i in np.nonzero(psk[:n_rec])[0]:
+                rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_SIM,
+                            track=f"trial{i}", sim_t=float(t[i]),
+                            kind="PS", fatal=True)
 
         rev = m & (ev == _EV_REVOKE)
         if rev.any():
@@ -359,6 +389,18 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
             fatal = (slots == 0) & (not spec.master_failover)
             status[idx[fatal]] = MASTER_REVOKED
             revocations[idx[~fatal]] += 1
+            if rec.enabled:
+                for s in np.unique(slots):
+                    rec.metrics.counter("revocations_total",
+                                        kind=kind_w[s]).inc(
+                                            int((slots == s).sum()))
+                for i, s in zip(idx, slots):
+                    if i < n_rec:
+                        rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_SIM,
+                                    track=f"trial{i}", sim_t=float(t[i]),
+                                    kind=kind_w[s], slot=int(s),
+                                    fatal=bool(s == 0
+                                               and not spec.master_failover))
 
         jrq = m & (ev == _EV_JOIN_REQ)
         if jrq.any():
@@ -366,6 +408,12 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
             slots = jreq_slot[idx]
             joined[idx, slots] = True
             pending_t[idx, slots] = t[idx] + JOIN_OVERHEAD_S
+            if n_rec:
+                for i, s in zip(idx, slots):
+                    if i < n_rec:
+                        rec.instant(obs.EV_SLOT_REQUEST, cat=obs.CAT_SIM,
+                                    track=f"trial{i}", sim_t=float(t[i]),
+                                    kind=kind_w[s], slot=int(s))
 
         jac = m & (ev == _EV_JOIN_ACT)
         if jac.any():
@@ -375,6 +423,12 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
             provisioned[idx, slots] = True
             active[idx, slots] = True
             start_t[idx, slots] = t[idx]
+            if n_rec:
+                for i, s in zip(idx, slots):
+                    if i < n_rec:
+                        rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SIM,
+                                    track=f"trial{i}", sim_t=float(t[i]),
+                                    kind=kind_w[s], slot=int(s))
             # fresh lifetime sampled at activation, grouped per slot so the
             # draw stays one vectorized call per server kind
             for s in np.unique(slots):
@@ -414,6 +468,13 @@ def simulate_batch(spec: ClusterSpec, n_trials: int,
     acc = accuracy_model_batch(avg_w, dynamic=dynamic,
                                adaptive_lr=spec.adaptive_lr)
     acc = np.where(status == COMPLETED, acc, np.nan)
+
+    if rec.enabled:
+        rec.metrics.counter("trials_total").inc(N)
+        rec.metrics.counter("trials_completed").inc(
+            int((status == COMPLETED).sum()))
+        rec.metrics.counter("steps_total", kind="virtual").inc(
+            float(np.where(status == COMPLETED, total, steps).sum()))
 
     lifetimes_h = np.where(provisioned, secs / 3600.0, np.nan)
     return MCBatch(spec=spec, status=status, time_h=t / 3600.0,

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as obslib     # "obs" locally names the observation
 from repro.core import pricing
 from repro.core.mc import accuracy_model_batch, ps_capped_rate_batch
 from repro.core.simulator import (DEFAULT_TOTAL_STEPS, JOIN_OVERHEAD_S,
@@ -162,11 +163,16 @@ class Policy:
     def __init__(self):
         self._incumbent: Optional[PolicyDecision] = None
         self.decision_log: List[Tuple[float, PolicyDecision]] = []
+        # label -> score for the most recent decide(); policies that rank
+        # candidates fill it so drivers can attach the considered
+        # alternatives to their replan spans (EV_REPLAN "candidates" arg)
+        self.last_scores: Optional[Dict[str, float]] = None
 
     def reset(self, rng: np.random.Generator) -> None:
         """Clear online state; called once per evaluation/episode."""
         self._incumbent = None
         self.decision_log = []
+        self.last_scores = None
 
     def decide(self, obs: PolicyObservation,
                ctx: ReplayContext) -> PolicyDecision:
@@ -231,6 +237,7 @@ class GreedyCheapest(Policy):
     def decide(self, obs, ctx):
         scores = {k: self._dollars_per_step(k, obs.prices_hr[k])
                   for k in self.kinds}
+        self.last_scores = dict(scores)     # kind -> $/step, for replan spans
         best = min(scores, key=scores.get)
         cur = obs.current.kind if obs.current is not None else None
         if cur in scores and \
@@ -282,6 +289,7 @@ class LookaheadMC(Policy):
         tail = ctx.tail(obs.t_s)
         scores = {dec: self._score(dec, remaining, tail)
                   for dec in self.candidates}
+        self.last_scores = {d.label: s for d, s in scores.items()}
         best = min(scores, key=scores.get)
         cur = obs.current
         if cur is not None and cur in scores and \
@@ -373,7 +381,8 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
                     seed: int = 0,
                     total_steps: int = DEFAULT_TOTAL_STEPS,
                     epoch_s: float = 1800.0,
-                    max_h: float = 48.0) -> PolicyOutcome:
+                    max_h: float = 48.0,
+                    recorder=None) -> PolicyOutcome:
     """Replay ``policy`` against ``trace`` over ``n_trials`` trials.
 
     Wall clock advances in shared decision epochs; between epochs each
@@ -383,8 +392,13 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
     flow; policies choose worker fleets) and revoked workers are refilled
     at the next epoch, so there is no fatal failure mode — trials that
     outlive ``max_h`` count as incomplete.
+
+    ``recorder`` (an ``obs.Recorder``) records each shared replanning
+    epoch as an ``EV_REPLAN`` span carrying the chosen decision and, for
+    ranking policies, the considered-candidate scores (``last_scores``).
     """
     ctx = context_for(trace)
+    rec = recorder if recorder is not None else obslib.NULL
     if isinstance(policy, OraclePolicy):
         return _oracle_envelope(policy, ctx, n_trials=n_trials, seed=seed,
                                 total_steps=total_steps, epoch_s=epoch_s,
@@ -456,7 +470,15 @@ def evaluate_policy(policy: Policy, trace, *, n_trials: int = 256,
                                frac_running=float(running.mean()),
                                current=current,
                                fleet_by_kind=fleet_now)
-        dec = policy.act(obs, ctx)
+        with rec.span(obslib.EV_REPLAN, cat=obslib.CAT_POLICY,
+                      sim_t=t_epoch, epoch=k) as replan_args:
+            dec = policy.act(obs, ctx)
+            if rec.enabled:
+                replan_args["decision"] = dec.label
+                replan_args["frac_running"] = obs.frac_running
+                replan_args["fleet_by_kind"] = dict(fleet_now)
+                if policy.last_scores:
+                    replan_args["candidates"] = dict(policy.last_scores)
         current = dec
 
         # --- reconcile the fleet to the decision (per target kind) ------

@@ -431,7 +431,8 @@ def summarize(results: Sequence[RunResult], n_runs: int) -> Summary:
 
 
 def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
-                  engine: str = "batched", trace=None) -> Summary:
+                  engine: str = "batched", trace=None,
+                  recorder=None) -> Summary:
     """Monte-Carlo over ``n_runs`` independent trials of ``spec``.
 
     ``engine="batched"`` (default) runs all trials as one vectorized array
@@ -447,6 +448,10 @@ def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
     Replay keeps the batched speedup — it is the same vectorized event
     loop with a different sampler — and is batched-only (the legacy loop
     predates the trace subsystem).
+
+    ``recorder`` (an ``obs.Recorder``) records aggregate trial counters
+    plus sampled per-trial event streams; batched-engine only (like
+    ``trace``, it rides the vectorized loop's event dispatch).
     """
     rng = np.random.default_rng(seed)
     if engine == "batched":
@@ -456,10 +461,13 @@ def simulate_many(spec: ClusterSpec, n_runs: int = 32, seed: int = 0,
             from repro.traces.replay import context_for
             replay = context_for(trace)
         return mc.summarize_batch(mc.simulate_batch(spec, n_runs, rng,
-                                                    replay=replay))
+                                                    replay=replay,
+                                                    recorder=recorder))
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'batched' or 'legacy'")
     if trace is not None:
         raise ValueError("trace replay requires engine='batched'")
+    if recorder is not None and recorder.enabled:
+        raise ValueError("recorder requires engine='batched'")
     return summarize([simulate_run(spec, rng) for _ in range(n_runs)], n_runs)

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import mc, pricing
 from repro.core.policy import (Policy, PolicyDecision, StaticPolicy,
                                make_observation)
@@ -199,7 +200,8 @@ class TransientGym:
                  total_steps: int = DEFAULT_TOTAL_STEPS,
                  epoch_s: float = 1800.0, max_h: float = 24.0,
                  refill: bool = False, seed: int = 0,
-                 batching: str = "dynamic"):
+                 batching: str = "dynamic",
+                 recorder: Optional[obs.Recorder] = None):
         _check_mode(batching)
         if isinstance(trace, ReplayContext):
             self.ctx = trace
@@ -214,6 +216,9 @@ class TransientGym:
         self.refill = bool(refill)
         self.seed = int(seed)
         self.batching = batching      # mixed-fleet work division model
+        # observability: events/metrics route through here; the NULL
+        # recorder keeps every emission a constant-time no-op
+        self.rec = recorder if recorder is not None else obs.NULL
 
     # -- wall-clock model -------------------------------------------------
 
@@ -270,6 +275,7 @@ class TransientGym:
         def cost_until(tq: float) -> float:
             return sum(cost_by_kind_until(tq).values())
 
+        rec = self.rec
         k = 0
         dec: Optional[PolicyDecision] = None
         while status == mc.RUNNING:
@@ -279,10 +285,20 @@ class TransientGym:
 
             # --- observe + act (the online policy interface) -------------
             fleet_now = kind_composition(s.kind for s in slots if s.active)
-            obs = make_observation(self.ctx, t_s=t_epoch, steps_done=vsteps,
-                                   total_steps=self.total_steps,
-                                   fleet_by_kind=fleet_now)
-            dec = self.policy.act(obs, self.ctx)
+            observation = make_observation(self.ctx, t_s=t_epoch,
+                                           steps_done=vsteps,
+                                           total_steps=self.total_steps,
+                                           fleet_by_kind=fleet_now)
+            with rec.span(obs.EV_REPLAN, cat=obs.CAT_POLICY,
+                          sim_t=t_epoch, epoch=k) as replan_args:
+                dec = self.policy.act(observation, self.ctx)
+                if rec.enabled:
+                    replan_args["decision"] = dec.label
+                    replan_args["vsteps"] = vsteps
+                    replan_args["fleet_by_kind"] = dict(fleet_now)
+                    scores = getattr(self.policy, "last_scores", None)
+                    if scores:                # considered-candidate metadata
+                        replan_args["candidates"] = dict(scores)
 
             # --- reconcile the fleet to the decision (per target kind) ----
             if k == 0 or self.refill:
@@ -296,6 +312,9 @@ class TransientGym:
                             events.append(SlotEvent(t_epoch, vsteps, s.cid,
                                                     EV_RELEASE, s.kind,
                                                     s.region))
+                            rec.instant(obs.EV_SLOT_RELEASE, cat=obs.CAT_GYM,
+                                        track=f"slot{s.cid}", sim_t=t_epoch,
+                                        kind=s.kind, region=s.region)
                         s.t_pending = np.inf
                         free_cids.append(s.cid)
                 for tkind, t_n in target.items():
@@ -308,6 +327,9 @@ class TransientGym:
                             events.append(SlotEvent(t_epoch, vsteps, s.cid,
                                                     EV_RELEASE, s.kind,
                                                     s.region))
+                            rec.instant(obs.EV_SLOT_RELEASE, cat=obs.CAT_GYM,
+                                        track=f"slot{s.cid}", sim_t=t_epoch,
+                                        kind=s.kind, region=s.region)
                         s.t_pending = np.inf
                         free_cids.append(s.cid)
                     # grow: initial provisioning (k=0) is free, like the
@@ -320,14 +342,24 @@ class TransientGym:
 
             n_act = sum(1 for s in slots if s.active)
             n_by_kind = kind_composition(s.kind for s in slots if s.active)
+            by_kind_epoch = cost_by_kind_until(max(t, t_epoch))
             epochs.append(EpochRecord(
                 epoch=k, t_s=t_epoch, vsteps=vsteps, n_active=n_act,
                 decision=dec.label,
                 spot_price_hr=float(pricing.price_at(dec.kind, t_epoch,
                                                      trace=self.ctx)),
-                cost_usd=cost_until(max(t, t_epoch)),
+                cost_usd=sum(by_kind_epoch.values()),
                 revocations=revocations,
                 n_by_kind=n_by_kind))
+            if rec.enabled:
+                # per-epoch ledger fields as labeled series (previously
+                # computed here and dropped): billed dollars and active
+                # workers per server kind
+                for kd, c in by_kind_epoch.items():
+                    rec.metrics.gauge("cost_usd", kind=kd).set(c)
+                for kd, n in n_by_kind.items():
+                    rec.metrics.gauge("workers", kind=kd).set(n)
+                rec.metrics.gauge("vsteps").set(vsteps)
 
             # --- advance the segment [t_epoch, t_epoch + epoch_s) ---------
             t = max(t, t_epoch)
@@ -359,6 +391,11 @@ class TransientGym:
                 vsteps += rate * dt
                 worker_int += n_active * dt
                 ps_int += dec.n_ps * dt
+                if rec.enabled and dt > 0 and rate > 0:
+                    # one constant-rate segment of virtual progress
+                    rec.sim_span(obs.EV_STEP, cat=obs.CAT_GYM, t0=t,
+                                 t1=t_next, rate=rate, vsteps=rate * dt,
+                                 n_active=n_active)
                 t = t_next
 
                 if what == "done":
@@ -375,6 +412,13 @@ class TransientGym:
                     events.append(SlotEvent(t, vsteps, s.cid, EV_REVOKE,
                                             s.kind, s.region))
                     free_cids.append(s.cid)
+                    if rec.enabled:
+                        rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_GYM,
+                                    track=f"slot{s.cid}", sim_t=t,
+                                    kind=s.kind, region=s.region,
+                                    vstep=vsteps)
+                        rec.metrics.counter("revocations_total", kind=s.kind,
+                                            region=s.region).inc()
                 elif what == "activate":
                     s = min((s for s in slots if np.isfinite(s.t_pending)),
                             key=lambda s: s.t_pending)
@@ -384,6 +428,11 @@ class TransientGym:
                     s.t_revoke = t + draw_lifetime(s.kind, t)
                     events.append(SlotEvent(t, vsteps, s.cid, EV_JOIN,
                                             s.kind, s.region))
+                    if rec.enabled:
+                        rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_GYM,
+                                    track=f"slot{s.cid}", sim_t=t,
+                                    kind=s.kind, region=s.region,
+                                    vstep=vsteps)
             k += 1
 
         if status == mc.RUNNING:                   # hit the max_h wall
@@ -391,6 +440,20 @@ class TransientGym:
         t_end = min(t, max_s)
         avg_w = worker_int / t_end if t_end > 0 else 0.0
         by_kind = cost_by_kind_until(t_end)
+        if rec.enabled:
+            # final ledger totals as metrics: the gauges are set from the
+            # very same by_kind dict / vsteps float the ledger is built
+            # from, so registry.total("cost_usd") == ledger.cost_usd and
+            # gauge("vsteps") == ledger.vsteps_done bit-for-bit
+            for kd, c in by_kind.items():
+                rec.metrics.gauge("cost_usd", kind=kd).set(c)
+            rec.metrics.gauge("vsteps").set(vsteps)
+            rec.metrics.counter("steps_total", kind="virtual").inc(vsteps)
+            rec.metrics.gauge("time_h").set(t_end / 3600.0)
+            rec.sim_span(obs.EV_EPISODE, cat=obs.CAT_GYM, t0=0.0, t1=t_end,
+                         trace=self.ctx.trace.name, policy=self.policy.name,
+                         status=int(status),
+                         completed=status == mc.COMPLETED)
         return GymLedger(
             trace=self.ctx.trace.name, policy=self.policy.name,
             total_steps=self.total_steps, status=int(status),
@@ -413,9 +476,10 @@ class TransientGym:
         ledger = self.plan()
         execute_masked(ledger, arch=arch, train_steps=train_steps,
                        per_slot=per_slot, seq_len=seq_len, seed=self.seed,
-                       ckpt=ckpt)
+                       ckpt=ckpt, recorder=self.rec)
         if async_updates > 0:
-            execute_async_ps(ledger, updates=async_updates, seed=self.seed)
+            execute_async_ps(ledger, updates=async_updates, seed=self.seed,
+                             recorder=self.rec)
         return ledger
 
 
@@ -542,11 +606,14 @@ def _eval_batch(cfg, dataset):
 
 def execute_masked(ledger: GymLedger, *, arch: str = "resnet32-cifar10",
                    train_steps: int = 96, per_slot: int = 4,
-                   seq_len: int = 32, seed: int = 0, ckpt=None) -> GymLedger:
+                   seq_len: int = 32, seed: int = 0, ckpt=None,
+                   recorder: Optional[obs.Recorder] = None) -> GymLedger:
     """Train the realized timeline with the masked elastic runtime.
 
     Fills ``executed_steps``, ``accuracy`` (held-out eval), ``final_loss``
-    and ``fast_saves`` on the ledger, in place.
+    and ``fast_saves`` on the ledger, in place. ``recorder`` observes the
+    real training steps (step spans on the step-index sim clock, the
+    warn/revoke/join membership events) alongside the plan's sim events.
     """
     import jax
     from repro.core.cluster import SparseCluster
@@ -580,7 +647,7 @@ def execute_masked(ledger: GymLedger, *, arch: str = "resnet32-cifar10",
             base_workers=max(len(sched.initial), 1),
             base_kind=sched.initial[0][1] if sched.initial else "K80")
     rt = ElasticRuntime(model, tcfg, dataset, cluster, ckpt,
-                        allocator=allocator)
+                        allocator=allocator, recorder=recorder)
     rt.add_events(sched.events)
     state = init_state(model, tcfg, jax.random.key(seed))
     if sched.executed_steps > 0:
@@ -599,7 +666,8 @@ def execute_masked(ledger: GymLedger, *, arch: str = "resnet32-cifar10",
 # ---------------------------------------------------------------------------
 
 def execute_async_ps(ledger: GymLedger, *, updates: int = 384,
-                     seed: int = 0) -> GymLedger:
+                     seed: int = 0,
+                     recorder: Optional[obs.Recorder] = None) -> GymLedger:
     """Replay the membership timeline through ``AsyncPSSimulator``.
 
     Events are rescaled to PS-update counts (update ``u`` of ``updates``
@@ -668,4 +736,11 @@ def execute_async_ps(ledger: GymLedger, *, updates: int = 384,
                   total_updates, seed=seed)
     ledger.staleness_hist = res.staleness_histogram()
     ledger.mean_staleness = res.mean_staleness
+    rec = recorder if recorder is not None else obs.NULL
+    if rec.enabled and ledger.staleness_hist:
+        # the async-PS staleness distribution as a metrics histogram
+        # (integer staleness values -> integer-ish bucket bounds)
+        rec.metrics.histogram(
+            "staleness", bounds=(0, 1, 2, 4, 8, 16, 32, 64)
+        ).observe_counts(ledger.staleness_hist)
     return ledger

@@ -9,6 +9,7 @@ import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.obs.profiling import annotate_span
 
 
 def _on_cpu() -> bool:
@@ -23,11 +24,12 @@ def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qs = q[:, 0]                                   # (B, H, D)
     kt = k_cache.transpose(0, 2, 1, 3)             # (B, KV, S, D)
     vt = v_cache.transpose(0, 2, 1, 3)
-    if impl == "xla":
-        out = decode_attention_ref(qs, kt, vt, lengths, window=window)
-    elif impl == "pallas":
-        out = decode_attention(qs, kt, vt, lengths, window=window,
-                               blk_k=blk_k, interpret=_on_cpu())
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
+    with annotate_span(f"kernel.decode_attention.{impl}"):
+        if impl == "xla":
+            out = decode_attention_ref(qs, kt, vt, lengths, window=window)
+        elif impl == "pallas":
+            out = decode_attention(qs, kt, vt, lengths, window=window,
+                                   blk_k=blk_k, interpret=_on_cpu())
+        else:
+            raise ValueError(f"unknown impl {impl!r}")
     return out[:, None]

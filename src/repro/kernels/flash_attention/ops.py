@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.obs.profiling import annotate_span
 
 
 def _on_cpu() -> bool:
@@ -26,13 +27,14 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    if impl == "xla":
-        out = attention_ref(qt, kt, vt, causal=causal, window=window,
-                            sm_scale=sm_scale)
-    elif impl == "pallas":
-        out = flash_attention(qt, kt, vt, causal=causal, window=window,
-                              sm_scale=sm_scale, blk_q=blk_q, blk_k=blk_k,
-                              interpret=_on_cpu())
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
+    with annotate_span(f"kernel.flash_attention.{impl}"):
+        if impl == "xla":
+            out = attention_ref(qt, kt, vt, causal=causal, window=window,
+                                sm_scale=sm_scale)
+        elif impl == "pallas":
+            out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                                  sm_scale=sm_scale, blk_q=blk_q,
+                                  blk_k=blk_k, interpret=_on_cpu())
+        else:
+            raise ValueError(f"unknown impl {impl!r}")
     return out.transpose(0, 2, 1, 3)

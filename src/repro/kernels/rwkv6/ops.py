@@ -5,6 +5,7 @@ import jax
 
 from repro.kernels.rwkv6.kernel import rwkv6_scan
 from repro.kernels.rwkv6.ref import rwkv6_ref
+from repro.obs.profiling import annotate_span
 
 
 def _on_cpu() -> bool:
@@ -17,11 +18,12 @@ def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     """r/k/v/w: (B, S, H, D); u: (H, D); s0 (B, H, D, D) optional.
     Returns (o (B, S, H, D) fp32, final state (B, H, D, D))."""
     rt, kt, vt, wt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, w))
-    if impl == "xla":
-        out, state = rwkv6_ref(rt, kt, vt, wt, u, s0)
-    elif impl == "pallas":
-        out, state = rwkv6_scan(rt, kt, vt, wt, u, s0, chunk=chunk,
-                                interpret=_on_cpu())
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
+    with annotate_span(f"kernel.rwkv6.{impl}"):
+        if impl == "xla":
+            out, state = rwkv6_ref(rt, kt, vt, wt, u, s0)
+        elif impl == "pallas":
+            out, state = rwkv6_scan(rt, kt, vt, wt, u, s0, chunk=chunk,
+                                    interpret=_on_cpu())
+        else:
+            raise ValueError(f"unknown impl {impl!r}")
     return out.transpose(0, 2, 1, 3), state

@@ -5,6 +5,7 @@ import jax
 
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.obs.profiling import annotate_span
 
 
 def _on_cpu() -> bool:
@@ -16,10 +17,11 @@ def ssd(xdt: jax.Array, Bc: jax.Array, Cc: jax.Array, dA: jax.Array, *,
     """xdt (B,S,H,P); Bc/Cc (B,S,N); dA (B,S,H) -> y (B,S,H,P)."""
     xt = xdt.transpose(0, 2, 1, 3)
     dt = dA.transpose(0, 2, 1)
-    if impl == "xla":
-        out = ssd_ref(xt, Bc, Cc, dt)
-    elif impl == "pallas":
-        out = ssd_scan(xt, Bc, Cc, dt, chunk=chunk, interpret=_on_cpu())
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
+    with annotate_span(f"kernel.ssd_scan.{impl}"):
+        if impl == "xla":
+            out = ssd_ref(xt, Bc, Cc, dt)
+        elif impl == "pallas":
+            out = ssd_scan(xt, Bc, Cc, dt, chunk=chunk, interpret=_on_cpu())
+        else:
+            raise ValueError(f"unknown impl {impl!r}")
     return out.transpose(0, 2, 1, 3)

@@ -14,6 +14,8 @@ import jax
 import numpy as np
 
 from repro.config import get_config, list_archs
+from repro.launch.obs_args import (add_obs_args, finalize_recorder,
+                                   recorder_from_args)
 from repro.models import layers as L
 from repro.models.builder import build_model
 from repro.serving import Request, ServeEngine
@@ -29,6 +31,7 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -39,8 +42,11 @@ def main() -> None:
     params = L.unbox(model.init(jax.random.key(args.seed)))
 
     rng = np.random.default_rng(args.seed)
+    rec, traced = recorder_from_args(
+        args, meta={"driver": "serve", "arch": args.arch,
+                    "requests": args.requests})
     engine = ServeEngine(model, params, max_batch=args.max_batch,
-                         max_len=args.max_len)
+                         max_len=args.max_len, recorder=rec)
     for rid in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size,
                               size=(args.prompt_len,)).tolist()
@@ -50,12 +56,15 @@ def main() -> None:
     t0 = time.monotonic()
     steps = engine.run_to_completion()
     wall = time.monotonic() - t0
-    print(json.dumps({
+    out = {
         "arch": args.arch, "requests": args.requests,
         "engine_steps": steps, "tokens_decoded": engine.tokens_decoded,
         "wall_s": round(wall, 2),
         "tokens_per_s": round(engine.tokens_decoded / max(wall, 1e-9), 1),
-    }, indent=1))
+    }
+    # serving events carry host timestamps only -> wall-clock timeline
+    out.update(finalize_recorder(args, rec, traced, clock="wall"))
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ from repro.core import (CheckpointManager, ElasticRuntime, RevocationEvent,
                         SparseCluster)
 from repro.core.transient import LIFETIMES
 from repro.data.pipeline import ShardedDataset
+from repro.launch.obs_args import (add_obs_args, finalize_recorder,
+                                   recorder_from_args)
 from repro.models.builder import build_model
 from repro.train.step import init_state
 from repro.train.trainer import Trainer
@@ -80,9 +82,12 @@ def run_gym(args) -> None:
         policy = GreedyCheapest(n_workers=args.initial_workers)
     else:
         policy = LookaheadMC(seed=args.seed)
+    rec, traced = recorder_from_args(
+        args, meta={"driver": "gym", "trace": args.trace,
+                    "policy": args.policy, "arch": args.arch})
     gym = TransientGym(trace, policy, total_steps=args.gym_total_steps,
                        epoch_s=args.gym_epoch_s, refill=args.policy != "static",
-                       seed=args.seed)
+                       seed=args.seed, recorder=rec)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.monotonic()
     ledger = gym.run(arch=args.arch, train_steps=args.steps,
@@ -93,6 +98,7 @@ def run_gym(args) -> None:
     del out["epochs"], out["schedule"]          # keep stdout scannable
     out["n_epochs"] = len(ledger.epochs)
     out["n_events"] = len(ledger.schedule)
+    out.update(finalize_recorder(args, rec, traced, clock="sim"))
     print(json.dumps(out, indent=1))
 
 
@@ -139,6 +145,7 @@ def main() -> None:
     ap.add_argument("--gym-async-updates", type=int, default=0,
                     help=">0: also replay through the async-PS simulator "
                          "for the staleness histogram")
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.gym:
@@ -159,18 +166,21 @@ def main() -> None:
                         seq_len=args.seq_len, seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
+    rec, traced = recorder_from_args(
+        args, meta={"driver": "elastic" if args.elastic else "trainer",
+                    "arch": args.arch, "steps": args.steps})
     t0 = time.monotonic()
     if args.elastic:
         cluster = SparseCluster(max_slots=args.slots)
         for s in range(args.initial_workers):
             cluster.fill_and_activate(s, 0, kind=args.server_kind)
-        rt = ElasticRuntime(model, tcfg, ds, cluster, ckpt)
+        rt = ElasticRuntime(model, tcfg, ds, cluster, ckpt, recorder=rec)
         rt.add_events(build_trace(args, np.random.default_rng(args.seed)))
         state = init_state(model, tcfg, jax.random.key(args.seed))
         state = rt.run(state, args.steps)
         log = rt.metrics_log
     else:
-        trainer = Trainer(model, tcfg, ds, ckpt)
+        trainer = Trainer(model, tcfg, ds, ckpt, recorder=rec)
         state = trainer.init_or_restore()
         metrics = {}
         state = trainer.fit(state, args.steps,
@@ -179,13 +189,15 @@ def main() -> None:
 
     wall = time.monotonic() - t0
     first, last = log[0], log[-1]
-    print(json.dumps({
+    out = {
         "arch": args.arch, "steps": args.steps, "wall_s": round(wall, 2),
         "loss_first": round(float(first["loss"]), 4),
         "loss_last": round(float(last["loss"]), 4),
         "elastic": args.elastic,
         "final_step": int(state.step) if hasattr(state, "step") else None,
-    }, indent=1))
+    }
+    out.update(finalize_recorder(args, rec, traced, clock="sim"))
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

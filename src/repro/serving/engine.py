@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.builder import Model, build_model
 from repro.train.step import make_serve_step
 
@@ -51,7 +52,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, *, max_batch: int,
-                 max_len: int, attn_impl: Optional[str] = None):
+                 max_len: int, attn_impl: Optional[str] = None,
+                 recorder: Optional[obs.Recorder] = None):
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # Serving hot path: flip decode attention onto the Pallas kernel
             # (or back to xla) without asking callers to rebuild the model.
@@ -67,10 +69,24 @@ class ServeEngine:
         self._pending: List[Request] = []
         self._prefill_cursor: Dict[int, int] = {}       # slot -> prompt index
         self.tokens_decoded = 0
+        self.rec = recorder if recorder is not None else obs.NULL
+        # request-lifecycle wall timestamps, keyed by rid: enqueue ->
+        # admit -> prefill-done; spans are emitted retrospectively at
+        # phase boundaries (a request retires long after its prefill)
+        self._t_enqueue: Dict[int, float] = {}
+        self._t_admit: Dict[int, float] = {}
+        self._t_prefill_done: Dict[int, float] = {}
 
     # -- request management --------------------------------------------------
     def submit(self, req: Request) -> None:
         self._pending.append(req)
+        rec = self.rec
+        if rec.enabled:
+            self._t_enqueue.setdefault(req.rid, rec.now())
+            rec.instant(obs.EV_ENQUEUE, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}", prompt_len=len(req.prompt),
+                        max_new_tokens=req.max_new_tokens)
+            rec.metrics.counter("requests_total").inc()
 
     def _reset_row(self, row: int) -> None:
         """Zero every cache leaf at this batch row (a new occupant must not
@@ -86,12 +102,17 @@ class ServeEngine:
         self.cache = jax.tree.map(zero_row, self.cache)
 
     def _admit(self) -> None:
+        rec = self.rec
         for i, slot in enumerate(self.slots):
             if slot is None and self._pending:
                 req = self._pending.pop(0)
                 self.slots[i] = req
                 self._prefill_cursor[i] = 0
                 self._reset_row(i)
+                if rec.enabled:
+                    self._t_admit[req.rid] = rec.now()
+                    rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
+                                track=f"slot{i}", rid=req.rid)
 
     def revoke_slot(self, slot: int) -> Optional[Request]:
         """Membership shrink mid-serve: the serving analogue of a worker
@@ -109,7 +130,21 @@ class ServeEngine:
         req = self.slots[slot]
         self.slots[slot] = None
         self._prefill_cursor.pop(slot, None)
+        rec = self.rec
+        if rec.enabled:
+            rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_SERVE,
+                        track=f"slot{slot}",
+                        rid=None if req is None else req.rid)
+            rec.metrics.counter("revocations_total", layer="serve").inc()
         if req is not None and not req.done:
+            if rec.enabled:
+                rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
+                            track=f"req{req.rid}", slot=slot,
+                            lost_tokens=len(req.generated))
+                rec.metrics.counter("requests_migrated").inc()
+                # regeneration restarts the lifecycle from the queue
+                self._t_admit.pop(req.rid, None)
+                self._t_prefill_done.pop(req.rid, None)
             req.generated = []
             self._pending.insert(0, req)
         return req
@@ -143,21 +178,50 @@ class ServeEngine:
                                        jnp.asarray(tokens))
         nxt = np.asarray(nxt)
 
+        rec = self.rec
+        n_dec = 0
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             if in_prefill[i]:
                 self._prefill_cursor[i] += 1
+                if rec.enabled and self._prefill_cursor[i] >= len(req.prompt):
+                    now = rec.now()
+                    t0 = self._t_admit.get(req.rid, now)
+                    rec.span_at(obs.EV_PREFILL, cat=obs.CAT_SERVE,
+                                track=f"req{req.rid}", t_wall=t0,
+                                dur_wall=now - t0, slot=i,
+                                tokens=len(req.prompt))
+                    self._t_prefill_done[req.rid] = now
+                    rec.metrics.counter("tokens_prefilled").inc(
+                        len(req.prompt))
                 continue
             tok = int(nxt[i, 0])
             req.generated.append(tok)
             self.tokens_decoded += 1
+            n_dec += 1
             pos = int(np.asarray(self.cache["pos"])[i])
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.generated) >= req.max_new_tokens
                     or pos >= self.max_len - 1):
                 req.done = True
                 self.slots[i] = None
+                if rec.enabled:
+                    now = rec.now()
+                    t0 = self._t_prefill_done.get(req.rid, now)
+                    rec.span_at(obs.EV_DECODE, cat=obs.CAT_SERVE,
+                                track=f"req{req.rid}", t_wall=t0,
+                                dur_wall=now - t0, slot=i,
+                                tokens=len(req.generated))
+                    rec.instant(obs.EV_COMPLETE, cat=obs.CAT_SERVE,
+                                track=f"req{req.rid}",
+                                tokens=len(req.generated))
+                    rec.metrics.counter("requests_completed").inc()
+                    t_q = self._t_enqueue.get(req.rid, now)
+                    rec.metrics.histogram("request_latency_ms").observe(
+                        (now - t_q) * 1e3)
+        if rec.enabled and n_dec:
+            rec.metrics.counter("tokens_decoded").inc(n_dec)
 
     def run_to_completion(self, max_steps: int = 10_000) -> int:
         steps = 0

@@ -2,10 +2,12 @@
 
 The thin orchestration layer over ``make_train_step``: restore-on-start
 (master-less checkpoint scan), periodic saves, revocation-warning fast
-saves, and metric logging. Elastic membership is layered on top by
-``core.elastic.ElasticRuntime``; this class is the static-cluster loop the
-paper starts from (1/2/4/8 fixed workers) and the restart harness both
-paths share.
+saves, and observability via an ``obs.Recorder`` (per-step spans plus the
+``steps_total``/``step_latency_ms`` series; the legacy ``metrics_log``
+list is kept as a plain-Python view of the same numbers). Elastic
+membership is layered on top by ``core.elastic.ElasticRuntime``; this
+class is the static-cluster loop the paper starts from (1/2/4/8 fixed
+workers) and the restart harness both paths share.
 
 Restart contract (paper C3): the data pipeline is pure in (step, shard,
 num_shards), and ``step`` rides inside the checkpoint payload, so a
@@ -22,6 +24,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.config import TrainConfig
 from repro.core.checkpoint import CheckpointManager
 from repro.data.pipeline import ShardedDataset
@@ -51,10 +54,12 @@ class Trainer:
     dataset: ShardedDataset
     ckpt: Optional[CheckpointManager] = None
     log_every: int = 50
+    recorder: Optional[obs.Recorder] = None
 
     def __post_init__(self):
         self.step_fn = jax.jit(make_train_step(self.model, self.tcfg))
         self.metrics_log: List[Dict[str, float]] = []
+        self.rec = self.recorder if self.recorder is not None else obs.NULL
 
     # -- lifecycle ----------------------------------------------------------
     def init_or_restore(self, key: Optional[jax.Array] = None) -> TrainState:
@@ -71,10 +76,19 @@ class Trainer:
             on_step: Optional[Callable[[int, Dict], None]] = None
             ) -> TrainState:
         start = int(state.step)
+        rec = self.rec
         t0 = time.monotonic()
         for step in range(start, start + num_steps):
+            ts = rec.now()
             batch = self.dataset.global_batch_at(step)
             state, m = self.step_fn(state, batch, jnp.float32(lr_scale))
+            if rec.enabled:
+                dt = rec.now() - ts
+                rec.span_at(obs.EV_STEP, cat=obs.CAT_TRAIN, t_wall=ts,
+                            dur_wall=dt, sim_t=float(step), dur_sim=1.0,
+                            loss=float(m["loss"]), mode="static")
+                rec.metrics.counter("steps_total", mode="static").inc()
+                rec.metrics.histogram("step_latency_ms").observe(dt * 1e3)
             if on_step is not None:
                 on_step(step, m)
             if (step + 1) % self.log_every == 0 or step == start:

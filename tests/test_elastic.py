@@ -110,6 +110,39 @@ def test_no_workers_raises(setup):
         rt.run(state, 3)
 
 
+def test_elastic_recorder_event_ordering(setup):
+    """Each revocation emits warn (step-1) then fire, and joins land at
+    their scheduled step — the event log mirrors the injected timeline."""
+    from repro import obs
+    model, state, ds = setup
+    cluster = SparseCluster(4)
+    cluster.fill_and_activate(0, 0)
+    rec = obs.Recorder(deterministic=True)
+    rt = ElasticRuntime(model, TCFG, ds, cluster, recorder=rec)
+    rt.add_events([
+        RevocationEvent(step=2, slot=1, kind="join"),
+        RevocationEvent(step=3, slot=1, kind="warn"),
+        RevocationEvent(step=4, slot=1, kind="revoke"),
+        RevocationEvent(step=6, slot=2, kind="join"),
+    ])
+    rt.run(state, 8)
+    from repro.obs import (EV_REVOKE_FIRE, EV_REVOKE_WARN, EV_SLOT_JOIN,
+                           EV_STEP)
+    seq = [(e.name, e.t_sim) for e in rec.events
+           if e.name in (EV_REVOKE_WARN, EV_REVOKE_FIRE, EV_SLOT_JOIN)]
+    assert seq == [(EV_SLOT_JOIN, 2.0), (EV_REVOKE_WARN, 3.0),
+                   (EV_REVOKE_FIRE, 4.0), (EV_SLOT_JOIN, 6.0)]
+    steps = [e for e in rec.events if e.name == EV_STEP]
+    assert len(steps) == 8
+    assert [e.args["n_active"] for e in steps] == [1, 1, 2, 2, 1, 1, 2, 2]
+    st = rec.metrics.to_stats()
+    assert st["steps_total{mode=masked}"] == 8
+    assert rec.metrics.total("revocations_total") == 1
+    # no CheckpointManager -> the warn cannot trigger a fast save
+    assert "fast_saves_total" not in st
+    assert st["step_latency_ms/count"] == 8
+
+
 def _tree_allclose(a, b, atol=1e-7):
     same = jax.tree.map(lambda x, y: bool(jnp.allclose(x, y, atol=atol)),
                         a, b)

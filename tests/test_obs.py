@@ -1,0 +1,318 @@
+"""Observability layer: event-log round-trip, exporter validation,
+recorder determinism, metric/ledger agreement, per-layer instrumentation
+contracts, and the no-op recorder overhead guard."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.policy import (GreedyCheapest, PolicyDecision, StaticPolicy,
+                               evaluate_policy)
+from repro.core.simulator import ClusterSpec, simulate_many
+from repro.core import mc
+from repro.gym import TransientGym
+from repro.obs.export import perf_entry, write_events_csv
+from repro.obs.metrics import (Counter, Histogram, MetricsRegistry,
+                               series_key)
+from repro.traces.synth import default_trace_suite
+
+SUITE = default_trace_suite(0)
+CALM, VOLATILE = SUITE[0], SUITE[1]
+FLEET = PolicyDecision("K80", 4)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_series_key_sorted_labels():
+    assert series_key("x", {}) == "x"
+    assert series_key("x", {"b": 1, "a": "y"}) == "x{a=y,b=1}"
+
+
+def test_counter_rejects_negative():
+    c = Counter()
+    c.inc(2.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 2.5
+
+
+def test_registry_get_or_create_and_total():
+    reg = MetricsRegistry()
+    reg.counter("steps_total", kind="a").inc(3)
+    reg.counter("steps_total", kind="a").inc(2)        # same series
+    reg.counter("steps_total", kind="b").inc(4)
+    reg.gauge("other").set(7)
+    assert reg.counter("steps_total", kind="a").value == 5
+    assert reg.total("steps_total") == 9
+    assert reg.to_stats()["steps_total{kind=a}"] == 5.0
+
+
+def test_histogram_buckets_and_summary():
+    h = Histogram(bounds=(1.0, 10.0))
+    for v in (0.5, 1.0, 5.0, 100.0):
+        h.observe(v)
+    # <=1, <=10, +inf overflow
+    assert h.bucket_counts == [2, 1, 1]
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 0.5 and s["max"] == 100.0
+    h2 = Histogram(bounds=(0, 1, 2))
+    h2.observe_counts({0: 3, 2: 2})
+    assert h2.count == 5 and h2.sum == 4.0
+
+
+def test_registry_to_stats_expands_histograms():
+    reg = MetricsRegistry()
+    reg.histogram("lat_ms").observe(3.0)
+    st = reg.to_stats()
+    assert st["lat_ms/count"] == 1.0 and st["lat_ms/mean"] == 3.0
+    # histograms are not summable totals
+    assert reg.total("lat_ms") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Event log round-trip + exporters
+# ---------------------------------------------------------------------------
+
+def _sample_recorder():
+    rec = obs.Recorder(deterministic=True, meta={"suite": "test"})
+    rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_GYM, track="slot1",
+                sim_t=10.0, kind="K80")
+    rec.sim_span(obs.EV_STEP, cat=obs.CAT_GYM, t0=0.0, t1=10.0, rate=4.5)
+    with rec.span(obs.EV_REPLAN, cat=obs.CAT_POLICY, sim_t=0.0) as args:
+        args["decision"] = "4xK80+1PS"
+    rec.metrics.counter("revocations_total", kind="K80").inc()
+    return rec
+
+
+def test_jsonl_round_trip(tmp_path):
+    rec = _sample_recorder()
+    path = rec.flush(str(tmp_path / "events.jsonl"))
+    events = obs.load_events(path)
+    assert events == rec.events
+    header = obs.load_header(path)
+    assert header["n_events"] == 3 and header["meta"] == {"suite": "test"}
+    assert header["metrics"]["revocations_total{kind=K80}"] == 1.0
+
+
+def test_load_rejects_unknown_version(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text(json.dumps({"jsonl_version": 99}) + "\n")
+    with pytest.raises(ValueError, match="version"):
+        obs.load_events(str(p))
+
+
+def test_chrome_trace_export_validates(tmp_path):
+    rec = _sample_recorder()
+    trace = obs.to_chrome_trace(rec.events, clock="sim")
+    n = obs.validate_chrome_trace(trace)
+    assert n == len(trace["traceEvents"]) > len(rec.events)  # + metadata
+    # wall clock keeps every event; sim clock drops sim-less ones
+    rec.instant("kernel.dispatch", cat=obs.CAT_KERNEL)      # no sim_t
+    sim = obs.to_chrome_trace(rec.events, clock="sim")
+    wall = obs.to_chrome_trace(rec.events, clock="wall")
+    names = lambda t: [e["name"] for e in t["traceEvents"] if e["ph"] != "M"]
+    assert "kernel.dispatch" not in names(sim)
+    assert "kernel.dispatch" in names(wall)
+    path = obs.write_chrome_trace(rec.events, str(tmp_path / "t.json"),
+                                  clock="wall")
+    with open(path) as f:
+        assert obs.validate_chrome_trace(json.load(f)) >= 4
+
+
+def test_validate_rejects_malformed():
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace({"no": "traceEvents"})
+    bad_span = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1, "tid": 1,
+                                 "ts": 0.0}]}                # missing dur
+    with pytest.raises(ValueError, match="dur"):
+        obs.validate_chrome_trace(bad_span)
+
+
+def test_events_csv(tmp_path):
+    rec = _sample_recorder()
+    path = write_events_csv(rec.events, str(tmp_path / "e.csv"))
+    lines = open(path).read().strip().splitlines()
+    assert len(lines) == 1 + len(rec.events)
+    assert lines[0].startswith("name,ph,cat,track")
+
+
+def test_perf_entry_schema_matches_bench_entries():
+    e = perf_entry(0.002, 0.001, flops=1e6, hbm_bytes=1e3,
+                   roofline_s=1e-5, roofline_frac=0.005,
+                   bottleneck="memory", speedup_vs_ref=0.5)
+    assert set(e) == {"wall_ms", "norm_wall", "flops", "hbm_bytes",
+                      "t_roofline_ms", "roofline_frac", "bottleneck",
+                      "speedup_vs_ref"}
+    assert e["wall_ms"] == 2.0 and e["norm_wall"] == 2.0
+    assert perf_entry(0.002, 0.001) == {"wall_ms": 2.0, "norm_wall": 2.0}
+
+
+def test_null_recorder_is_inert():
+    n0 = len(obs.NULL.events)
+    obs.NULL.instant("x", cat=obs.CAT_GYM)
+    obs.NULL.sim_span("x", cat=obs.CAT_GYM, t0=0, t1=1)
+    with obs.NULL.span("x", cat=obs.CAT_GYM) as args:
+        args["ignored"] = 1
+    assert len(obs.NULL.events) == n0 == 0
+    with pytest.raises(ValueError):
+        obs.NULL.flush("/tmp/nope.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Gym episode: determinism, ledger agreement, event ordering
+# ---------------------------------------------------------------------------
+
+def _planned(trace, policy_fn, seed=0):
+    rec = obs.Recorder(deterministic=True)
+    led = TransientGym(trace, policy_fn(), seed=seed, recorder=rec).plan()
+    return led, rec
+
+
+def test_gym_recorder_deterministic():
+    a_led, a = _planned(VOLATILE, lambda: GreedyCheapest(n_workers=4), seed=3)
+    b_led, b = _planned(VOLATILE, lambda: GreedyCheapest(n_workers=4), seed=3)
+    assert [e.to_json() for e in a.events] == [e.to_json() for e in b.events]
+    assert a.metrics.to_stats() == b.metrics.to_stats()
+
+
+def test_gym_metrics_reproduce_ledger():
+    """Acceptance: metrics summary == episode ledger within 1e-6."""
+    for trace, seed in ((CALM, 0), (VOLATILE, 1)):
+        led, rec = _planned(trace, lambda: GreedyCheapest(n_workers=4),
+                            seed=seed)
+        st = rec.metrics.to_stats()
+        assert abs(rec.metrics.total("cost_usd") - led.cost_usd) < 1e-6
+        assert abs(st["steps_total{kind=virtual}"] - led.vsteps_done) < 1e-6
+        for kd, c in led.cost_by_kind.items():
+            assert abs(st[f"cost_usd{{kind={kd}}}"] - c) < 1e-6
+
+
+def test_gym_events_match_ledger_schedule():
+    """Revoke/join instants mirror the ledger's SlotEvent rows in order."""
+    led, rec = _planned(VOLATILE, lambda: StaticPolicy(FLEET), seed=2)
+    got = [(e.name, e.t_sim, e.args.get("kind"))
+           for e in rec.events
+           if e.name in (obs.EV_REVOKE_FIRE, obs.EV_SLOT_JOIN)
+           and e.cat == obs.CAT_GYM]
+    want = []
+    for ev in led.schedule:
+        if ev.kind == "revoke":
+            want.append((obs.EV_REVOKE_FIRE, ev.t_s, ev.server_kind))
+        elif ev.kind == "join":
+            want.append((obs.EV_SLOT_JOIN, ev.t_s, ev.server_kind))
+    assert got == want
+    n_rev = sum(1 for ev in led.schedule if ev.kind == "revoke")
+    assert rec.metrics.total("revocations_total") == n_rev
+
+
+def test_gym_replan_span_carries_candidates():
+    led, rec = _planned(CALM, lambda: GreedyCheapest(n_workers=4))
+    replans = [e for e in rec.events if e.name == obs.EV_REPLAN]
+    assert replans and all(e.cat == obs.CAT_POLICY for e in replans)
+    first = replans[0].args
+    assert "decision" in first
+    assert set(first["candidates"]) == {"K80", "P100", "V100"}
+    assert all(v > 0 for v in first["candidates"].values())
+
+
+def test_gym_episode_span_and_step_segments():
+    led, rec = _planned(CALM, lambda: StaticPolicy(FLEET))
+    episode = [e for e in rec.events if e.name == obs.EV_EPISODE]
+    assert len(episode) == 1
+    assert episode[0].dur_sim == pytest.approx(led.time_h * 3600.0)
+    segs = [e for e in rec.events
+            if e.name == obs.EV_STEP and e.cat == obs.CAT_GYM]
+    assert segs
+    vsteps = sum(e.args["vsteps"] for e in segs)
+    assert vsteps == pytest.approx(led.vsteps_done, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# MC engine: sampled trial streams + aggregate counters
+# ---------------------------------------------------------------------------
+
+def test_mc_sampled_trial_streams():
+    spec = ClusterSpec.homogeneous("K80", 4, transient=True,
+                                   total_steps=64_000)
+    rec = obs.Recorder(deterministic=True)
+    batch = mc.simulate_batch(spec, 32, np.random.default_rng(0),
+                              recorder=rec, record_trials=3)
+    st = rec.metrics.to_stats()
+    assert st["trials_total"] == 32
+    assert st["trials_completed"] == float(batch.completed.sum())
+    # streams exist only for the sampled subset
+    tracks = {e.track for e in rec.events}
+    assert tracks <= {"trial0", "trial1", "trial2"}
+    # each recorded trial's events advance monotonically in sim time
+    for tr in tracks:
+        ts = [e.t_sim for e in rec.events if e.track == tr]
+        assert ts == sorted(ts)
+    # revocation counter counts ALL trials, not just recorded ones
+    assert rec.metrics.total("revocations_total") >= batch.revocations.sum()
+
+
+def test_simulate_many_recorder_passthrough():
+    rec = obs.Recorder(deterministic=True)
+    spec = ClusterSpec.homogeneous("K80", 2, total_steps=20_000)
+    simulate_many(spec, n_runs=8, seed=0, recorder=rec)
+    assert rec.metrics.to_stats()["trials_total"] == 8
+    with pytest.raises(ValueError, match="batched"):
+        simulate_many(spec, n_runs=2, seed=0, engine="legacy", recorder=rec)
+
+
+# ---------------------------------------------------------------------------
+# Policy evaluator replan spans
+# ---------------------------------------------------------------------------
+
+def test_evaluate_policy_replan_spans():
+    rec = obs.Recorder(deterministic=True)
+    out = evaluate_policy(GreedyCheapest(4), CALM, n_trials=8, seed=0,
+                          recorder=rec)
+    replans = [e for e in rec.events if e.name == obs.EV_REPLAN]
+    assert replans, "no replan spans recorded"
+    assert all(e.cat == obs.CAT_POLICY for e in replans)
+    # one span per decision epoch, timestamped on the sim clock
+    ts = [e.t_sim for e in replans]
+    assert ts == sorted(ts) and ts[0] == 0.0
+    assert all("decision" in e.args and "candidates" in e.args
+               for e in replans)
+    assert replans[0].args["decision"].endswith("PS")
+
+
+# ---------------------------------------------------------------------------
+# No-op overhead guard
+# ---------------------------------------------------------------------------
+
+def test_null_recorder_overhead_under_2pct():
+    """Per-site NULL-recorder cost, scaled to the episode's event volume,
+    must stay under 2% of the smoke episode's wall time."""
+    walls = []
+    for _ in range(3):
+        gym = TransientGym(VOLATILE, StaticPolicy(FLEET), seed=0)
+        t0 = time.perf_counter()
+        gym.plan()
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+
+    rec_on = obs.Recorder(deterministic=True)
+    TransientGym(VOLATILE, StaticPolicy(FLEET), seed=0,
+                 recorder=rec_on).plan()
+    n_sites = max(len(rec_on.events), 1) * 2       # 2x margin on volume
+
+    null = obs.NULL
+    costs = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n_sites):
+            null.instant("x", cat=obs.CAT_GYM)
+            if null.enabled:                       # the hot-loop guard idiom
+                null.sim_span("x", cat=obs.CAT_GYM, t0=0.0, t1=1.0)
+        costs.append(time.perf_counter() - t0)
+    null_cost = min(costs)
+    assert null_cost < 0.02 * wall, (
+        f"null-recorder overhead {null_cost*1e3:.2f}ms vs "
+        f"2% budget of {wall*1e3:.1f}ms episode")

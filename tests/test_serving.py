@@ -112,6 +112,51 @@ def test_revoke_empty_slot_is_noop(setup):
     assert not eng.has_work()
 
 
+def test_request_lifecycle_events(setup):
+    """Every request's event stream reads enqueue -> slot.join -> prefill
+    -> decode -> complete, and a mid-decode revocation inserts a migrate
+    instant without losing the request."""
+    from repro import obs
+    cfg, model, params = setup
+    rec = obs.Recorder()
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, recorder=rec)
+    reqs = _reqs(cfg, 3, seed=5, max_new=8)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(7):                       # past prefill, into decode
+        eng.step()
+    eng.revoke_slot(0)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs)
+
+    def stream(rid):
+        out = []
+        for e in rec.events:
+            if e.track == f"req{rid}" or e.args.get("rid") == rid:
+                out.append(e.name)
+        return out
+
+    migrated = int(next(e.track for e in rec.events
+                        if e.name == obs.EV_MIGRATE).removeprefix("req"))
+    for r in reqs:
+        s = stream(r.rid)
+        assert s[0] == obs.EV_ENQUEUE and s[-1] == obs.EV_COMPLETE
+        # admitted (possibly twice if migrated), prefilled, decoded
+        assert s.count(obs.EV_SLOT_JOIN) == (2 if r.rid == migrated else 1)
+        assert obs.EV_PREFILL in s and obs.EV_DECODE in s
+        assert s.index(obs.EV_PREFILL) < s.index(obs.EV_DECODE)
+    st = rec.metrics.to_stats()
+    assert st["requests_total"] == 3
+    assert st["requests_completed"] == 3
+    assert st["requests_migrated"] == 1
+    assert rec.metrics.total("revocations_total") == 1
+    assert st["request_latency_ms/count"] == 3
+    assert st["tokens_decoded"] >= 3 * 8
+    # wall-clock spans export cleanly even without a sim clock
+    trace = obs.to_chrome_trace(rec.events, clock="wall")
+    assert obs.validate_chrome_trace(trace) > 0
+
+
 def test_eos_early_stop(setup):
     cfg, model, params = setup
     eng = ServeEngine(model, params, max_batch=1, max_len=64)
