@@ -15,7 +15,8 @@ from benchmarks import (fig5_dynamic_cluster, fig6_ps_bottleneck,
                         fig8_geo_distributed, frontier, gym_replay,
                         kernel_bench, pipeline_bench, policy_replay,
                         roofline_report, selective_revocation,
-                        staleness_accuracy, table1_transient_vs_ondemand,
+                        serve_frontier, staleness_accuracy,
+                        table1_transient_vs_ondemand,
                         table3_scale_up_vs_out, table4_revocation_overhead,
                         table5_ondemand_comparison, table6_heterogeneous)
 
@@ -35,6 +36,7 @@ MODULES = {
     "policy": policy_replay,
     "staleness": staleness_accuracy,
     "selective": selective_revocation,
+    "serve": serve_frontier,
     "roofline": roofline_report,
 }
 

@@ -157,6 +157,12 @@ class Policy:
     harness and the trace-driven training gym alike — replans a fleet
     with one call per epoch instead of re-implementing the plumbing.
     ``decide`` stays the pure strategy hook subclasses override.
+
+    The interface is deliberately duck-typed: ``obs`` can be ANY frozen
+    dataclass with a ``current`` field and ``ctx`` is optional, so the
+    same act/decide/hysteresis machinery drives non-market controllers
+    too — ``serving.autoscale.ReplicaAutoscaler`` replans inference
+    replica counts from a ``ServeLoad`` observation with no trace at all.
     """
     name = "policy"
 
@@ -175,11 +181,11 @@ class Policy:
         self.last_scores = None
 
     def decide(self, obs: PolicyObservation,
-               ctx: ReplayContext) -> PolicyDecision:
+               ctx: Optional[ReplayContext] = None) -> PolicyDecision:
         raise NotImplementedError
 
     def act(self, obs: PolicyObservation,
-            ctx: ReplayContext) -> PolicyDecision:
+            ctx: Optional[ReplayContext] = None) -> PolicyDecision:
         """One online replanning step: observe -> decide -> record.
 
         If the driver did not track an incumbent (``obs.current`` is

@@ -1,8 +1,17 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched decode with the slot-based continuous-batching engine. Requests
-arrive in waves (more requests than slots) to exercise admission/retire;
-throughput and per-request outputs are printed as JSON.
+Batched decode with the slot-based continuous-batching engine. Two
+workload modes:
+
+- default: ``--requests N`` synthetic prompts submitted up front (waves:
+  more requests than slots) — the original admission/retire exercise;
+- ``--trace``: replay a seeded request trace (``serve-diurnal`` /
+  ``serve-bursty`` from ``traces.requests``, or a ``.jsonl`` path) on an
+  accelerated virtual clock, with SLO-aware queueing and optionally a
+  mid-trace revocation (``--revoke-at FRAC`` fires ``revoke_slot``;
+  ``--warn-at FRAC`` begins a graceful drain instead).
+
+Throughput, TTFT/TPOT percentiles, and per-request outputs print as JSON.
 """
 from __future__ import annotations
 
@@ -18,7 +27,82 @@ from repro.launch.obs_args import (add_obs_args, finalize_recorder,
                                    recorder_from_args)
 from repro.models import layers as L
 from repro.models.builder import build_model
-from repro.serving import Request, ServeEngine
+from repro.serving import FIFOQueue, Request, ServeEngine, SLOQueue
+from repro.traces.requests import RequestTrace, synthetic_request_trace
+
+
+def _pct(xs, q):
+    return round(float(np.percentile(xs, q)), 4) if xs else None
+
+
+def _load_request_trace(spec: str, seed: int) -> RequestTrace:
+    if spec.endswith(".jsonl"):
+        return RequestTrace.from_jsonl(spec)
+    if spec == "serve-diurnal":
+        return synthetic_request_trace("serve-diurnal", seed=seed)
+    if spec == "serve-bursty":
+        return synthetic_request_trace(
+            "serve-bursty", seed=seed,
+            bursts=((0.4, 0.55, 3.0),))
+    raise SystemExit(f"unknown request trace {spec!r}: expected a .jsonl "
+                     "path, 'serve-diurnal', or 'serve-bursty'")
+
+
+def _replay_trace(args, engine: ServeEngine, trace: RequestTrace,
+                  clock_state: dict, rng) -> list:
+    """Replay arrivals on the virtual clock: between arrivals the engine
+    steps (each step advances the clock by ``--step-cost-s``), and the
+    revocation (if any) fires at its fractional position in the trace."""
+    vocab = engine.model.cfg.vocab_size
+    reqs = []
+    warn_done = revoke_done = False
+    t_warn = args.warn_at * trace.horizon_s if args.warn_at else None
+    t_revoke = args.revoke_at * trace.horizon_s if args.revoke_at else None
+    def mid_decode(req):
+        return req is not None and req.generated \
+            and req.remaining_tokens > args.grace_tokens
+
+    def maybe_revoke():
+        # revocations are deferred until a decode is genuinely in flight
+        # (a warn/fire on an idle or prefill-only replica displaces no
+        # decoded work and demonstrates nothing)
+        nonlocal warn_done, revoke_done
+        if t_warn is not None and not warn_done \
+                and clock_state["t"] >= t_warn \
+                and any(mid_decode(r) for r in engine.slots):
+            migrated = engine.begin_drain(grace_tokens=args.grace_tokens)
+            # single-engine driver: the replacement replica IS this engine
+            # reopened, so migrated work prefix-replays right back in
+            engine.draining = False
+            for m in migrated:
+                engine.submit(m)
+            warn_done = True
+        if t_revoke is not None and not revoke_done \
+                and clock_state["t"] >= t_revoke \
+                and engine.slots[0] is not None \
+                and engine.slots[0].generated:
+            engine.revoke_slot(0)
+            revoke_done = True
+
+    for ev in trace.events:
+        while clock_state["t"] < ev.t_s and engine.has_work():
+            engine.step()
+            clock_state["t"] += args.step_cost_s
+            maybe_revoke()
+        clock_state["t"] = max(clock_state["t"], ev.t_s)
+        req = Request(rid=ev.rid,
+                      prompt=rng.integers(
+                          1, vocab, size=(ev.prompt_len,)).tolist(),
+                      max_new_tokens=ev.max_new_tokens,
+                      arrival_s=ev.t_s, priority=ev.priority,
+                      deadline_s=ev.t_s + ev.deadline_rel_s, slo=ev.slo)
+        reqs.append(req)
+        engine.submit(req)
+    while engine.has_work():
+        engine.step()
+        clock_state["t"] += args.step_cost_s
+        maybe_revoke()
+    return reqs
 
 
 def main() -> None:
@@ -31,6 +115,31 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-mode", choices=("block", "token"),
+                    default="block",
+                    help="blocked prefill (one compiled scan per block) or "
+                         "the legacy one-token-per-step fallback")
+    ap.add_argument("--prefill-block", type=int, default=16,
+                    help="max prompt tokens ingested per prefill dispatch")
+    ap.add_argument("--queue", choices=("fifo", "slo"), default="fifo",
+                    help="request queue discipline")
+    ap.add_argument("--queue-capacity", type=int, default=None,
+                    help="SLO queue backlog bound (admission control)")
+    ap.add_argument("--trace", default=None, metavar="SPEC",
+                    help="replay a request trace: 'serve-diurnal', "
+                         "'serve-bursty', or a RequestTrace .jsonl path")
+    ap.add_argument("--step-cost-s", type=float, default=0.05,
+                    help="virtual seconds one engine step costs during "
+                         "trace replay")
+    ap.add_argument("--warn-at", type=float, default=None, metavar="FRAC",
+                    help="begin a graceful drain (prefix-replay migration) "
+                         "at this fraction of the trace horizon")
+    ap.add_argument("--revoke-at", type=float, default=None, metavar="FRAC",
+                    help="fire revoke_slot(0) at this fraction of the "
+                         "trace horizon")
+    ap.add_argument("--grace-tokens", type=int, default=4,
+                    help="decodes within this many tokens of done finish "
+                         "on a draining replica")
     add_obs_args(ap)
     args = ap.parse_args()
 
@@ -44,23 +153,50 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     rec, traced = recorder_from_args(
         args, meta={"driver": "serve", "arch": args.arch,
-                    "requests": args.requests})
+                    "trace": args.trace, "queue": args.queue,
+                    "prefill": args.prefill_mode})
+    queue = SLOQueue(capacity=args.queue_capacity) if args.queue == "slo" \
+        else FIFOQueue()
+    clock_state = {"t": 0.0}
     engine = ServeEngine(model, params, max_batch=args.max_batch,
-                         max_len=args.max_len, recorder=rec)
-    for rid in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size,
-                              size=(args.prompt_len,)).tolist()
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.max_new_tokens))
+                         max_len=args.max_len, recorder=rec, queue=queue,
+                         prefill=args.prefill_mode,
+                         prefill_block=args.prefill_block,
+                         clock=(lambda: clock_state["t"]) if args.trace
+                         else None)
 
     t0 = time.monotonic()
-    steps = engine.run_to_completion()
+    if args.trace:
+        trace = _load_request_trace(args.trace, args.seed)
+        reqs = _replay_trace(args, engine, trace, clock_state, rng)
+        steps = None
+    else:
+        reqs = []
+        for rid in range(args.requests):
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  size=(args.prompt_len,)).tolist()
+            req = Request(rid=rid, prompt=prompt,
+                          max_new_tokens=args.max_new_tokens)
+            reqs.append(req)
+            engine.submit(req)
+        steps = engine.run_to_completion()
     wall = time.monotonic() - t0
+
+    done = [r for r in reqs if r.done]
+    ttfts = [r.timing.ttft_s for r in done if r.timing.ttft_s is not None]
+    tpots = [t for t in (r.timing.tpot_s(len(r.generated)) for r in done)
+             if t is not None]
     out = {
-        "arch": args.arch, "requests": args.requests,
+        "arch": args.arch, "requests": len(reqs),
+        "completed": len(done),
+        "rejected": engine.requests_rejected,
         "engine_steps": steps, "tokens_decoded": engine.tokens_decoded,
+        "tokens_lost": engine.tokens_lost,
+        "tokens_replayed": engine.tokens_replayed,
         "wall_s": round(wall, 2),
         "tokens_per_s": round(engine.tokens_decoded / max(wall, 1e-9), 1),
+        "ttft_p50_s": _pct(ttfts, 50), "ttft_p95_s": _pct(ttfts, 95),
+        "tpot_p50_s": _pct(tpots, 50), "tpot_p95_s": _pct(tpots, 95),
     }
     # serving events carry host timestamps only -> wall-clock timeline
     out.update(finalize_recorder(args, rec, traced, clock="wall"))

@@ -35,6 +35,36 @@ class Model:
         return jax.eval_shape(self.init, key)
 
 
+def cache_batch_axes(model: Model, max_len: int = 8,
+                     enc_len: int = 0) -> PyTree:
+    """Per-leaf batch-axis index of the decode cache, derived from the
+    cache *layout* itself: the cache is shaped abstractly (``eval_shape``,
+    no allocation) at two different batch sizes and the one axis whose
+    extent scales with batch is the batch axis. Unlike shape matching
+    against ``max_batch``, this cannot misfire when a non-batch dimension
+    (layer count, heads, block size) happens to coincide with the batch
+    size — both probes must differ on the batch axis and only there.
+    """
+    if model.init_cache is None:
+        raise ValueError(f"{model.cfg.name}: family {model.cfg.family!r} "
+                         "has no decode cache")
+    b1, b2 = 3, 5            # coprime probes; any non-batch dim is constant
+    c1 = jax.eval_shape(lambda: model.init_cache(b1, max_len,
+                                                 enc_len=enc_len))
+    c2 = jax.eval_shape(lambda: model.init_cache(b2, max_len,
+                                                 enc_len=enc_len))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"cannot derive batch axis: shapes {a.shape} "
+                             f"vs {b.shape} differ on axes {diffs}")
+        return diffs[0]
+
+    return jax.tree.map(axis, c1, c2)
+
+
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.family == "resnet":
         return Model(

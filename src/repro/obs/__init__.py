@@ -25,8 +25,8 @@ stack without dragging in the training stack.
 from repro.obs.events import (CAT_BENCH, CAT_GYM, CAT_KERNEL,  # noqa: F401
                               CAT_POLICY, CAT_SERVE, CAT_SIM, CAT_TRAIN,
                               EV_ALLREDUCE, EV_COMPLETE, EV_DECODE,
-                              EV_ENQUEUE, EV_EPISODE, EV_MIGRATE,
-                              EV_PREFILL, EV_REPLAN, EV_REVOKE_FIRE,
+                              EV_DRAIN, EV_ENQUEUE, EV_EPISODE, EV_MIGRATE,
+                              EV_PREFILL, EV_REJECT, EV_REPLAN, EV_REVOKE_FIRE,
                               EV_REVOKE_WARN, EV_SLOT_JOIN, EV_SLOT_RELEASE,
                               EV_SLOT_REQUEST, EV_STEP, EV_TRIAL_DONE,
                               TAXONOMY, Event, NULL, NullRecorder, Recorder,

@@ -57,6 +57,8 @@ EV_DECODE = "decode"                   # serving: token generation span
 EV_ENQUEUE = "request.enqueue"         # serving: request submitted
 EV_COMPLETE = "request.complete"       # serving: request retired
 EV_MIGRATE = "request.migrate"         # serving: displaced by revocation
+EV_REJECT = "request.reject"           # serving: shed by admission control
+EV_DRAIN = "drain"                     # serving: replica draining span
 EV_EPISODE = "episode"                 # one whole gym episode span
 EV_TRIAL_DONE = "trial.complete"       # MC trial reached total_steps
 
@@ -74,6 +76,8 @@ TAXONOMY = {
     EV_ENQUEUE: "serving: request entered the queue",
     EV_COMPLETE: "serving: request retired with its generation",
     EV_MIGRATE: "serving: in-flight request displaced by a revocation",
+    EV_REJECT: "serving: request shed (capacity, deadline, or draining)",
+    EV_DRAIN: "serving: replica draining after a revocation warning",
     EV_EPISODE: "one gym episode end-to-end",
     EV_TRIAL_DONE: "MC trial completed its virtual workload",
 }

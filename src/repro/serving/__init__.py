@@ -1,1 +1,6 @@
-from repro.serving.engine import ServeEngine, Request  # noqa: F401
+from repro.serving.engine import (Request, RequestTiming,  # noqa: F401
+                                  ServeEngine, with_impls)
+from repro.serving.queue import FIFOQueue, SLOQueue  # noqa: F401
+from repro.serving.cluster import ServeCluster  # noqa: F401
+from repro.serving.autoscale import (ReplicaAutoscaler,  # noqa: F401
+                                     ServeLoad)

@@ -1,0 +1,82 @@
+"""Replica autoscaling: ``core.policy.Policy`` reused for serving.
+
+The planning layer's policy machinery (incumbent bookkeeping, decision
+log, hysteresis in the strategy hook) is market-agnostic — ``Policy.act``
+only needs a frozen-dataclass observation with a ``current`` field. Here
+the observation is serving load instead of spot prices, and the decision
+is a replica count instead of a fleet composition: the same controller
+shape the paper's redesign argues for (observe conditions, replan the
+cluster), pointed at inference.
+
+``ReplicaAutoscaler`` targets a slot-utilization band: scale up when
+utilization (or queue backlog per replica) runs hot, scale down when the
+fleet idles — with multiplicative hysteresis so a bursty arrival trace
+does not thrash replicas through prefill-replay churn the way price noise
+would thrash training fleets through rejoin overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.policy import Policy
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeLoad:
+    """Current-conditions observation for a serving fleet."""
+    t_s: float
+    utilization: float            # mean active_slots / max_batch, live fleet
+    queue_depth: int              # queued requests across the fleet
+    n_replicas: int               # live (non-draining) replicas
+    slots_per_replica: int
+    current: Optional["ReplicaDecision"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaDecision:
+    n_replicas: int
+
+    @property
+    def label(self) -> str:
+        return f"{self.n_replicas}r"
+
+
+class ReplicaAutoscaler(Policy):
+    """Keep utilization inside [low, high] by replanning replica counts.
+
+    The demand estimate is (busy slots + queued work) / slots-per-replica;
+    the decision is that demand divided by ``target_util``, clamped to
+    [min_replicas, max_replicas]. Hysteresis: the incumbent survives
+    unless the target differs by more than ``deadband`` replicas — the
+    serving analogue of GreedyCheapest's switch margin.
+    """
+
+    def __init__(self, *, min_replicas: int = 1, max_replicas: int = 8,
+                 target_util: float = 0.75, deadband: int = 0):
+        super().__init__()
+        if not (0.0 < target_util <= 1.0):
+            raise ValueError(f"target_util must be in (0, 1], "
+                             f"got {target_util}")
+        if min_replicas < 1 or max_replicas < min_replicas:
+            raise ValueError("need 1 <= min_replicas <= max_replicas")
+        self.name = f"replica-autoscaler({target_util:.2f})"
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.target_util = target_util
+        self.deadband = deadband
+
+    def decide(self, obs: ServeLoad, ctx=None) -> ReplicaDecision:
+        busy = obs.utilization * obs.n_replicas * obs.slots_per_replica
+        demand_slots = busy + obs.queue_depth
+        want = math.ceil(demand_slots
+                         / (obs.slots_per_replica * self.target_util)) \
+            if demand_slots > 0 else self.min_replicas
+        want = max(self.min_replicas, min(self.max_replicas, want))
+        self.last_scores = {"demand_slots": float(demand_slots),
+                            "target": float(want)}
+        cur = obs.current.n_replicas if obs.current is not None else None
+        if cur is not None and abs(want - cur) <= self.deadband:
+            want = cur
+        return ReplicaDecision(n_replicas=want)

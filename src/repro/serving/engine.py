@@ -1,29 +1,54 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Batched serving engine: phase-split continuous batching over slots.
 
 The serving analogue of sparse mapping: a fixed-capacity slot array whose
-occupancy is runtime data, so one compiled ``serve_step`` serves any mix of
-active requests — requests join/retire without recompilation, exactly how
-worker slots join/leave the elastic training cluster. A revoked serving
-replica loses only its in-flight tokens; prompts are re-enqueued by the
-front-end (the decode cache is reconstructible state, never checkpointed).
+occupancy is runtime data, so one compiled step serves any mix of active
+requests — requests join/retire without recompilation, exactly how worker
+slots join/leave the elastic training cluster.
 
-Decode runs one token per step across all active slots; finished rows are
-masked. Prefill feeds prompt tokens through the same decode path (correct
-for every family incl. SSM/hybrid state caches; a blocked prefill via
-``forward`` is the throughput path used by the prefill benchmarks).
+Two compiled paths, phase-split per engine step:
+
+- **prefill** (``prefill="block"``, default): admitted prompts are
+  ingested in blocks of up to ``prefill_block`` tokens through ONE
+  compiled masked scan over the decode cell (``make_prefill_step``) —
+  rows in decode phase are frozen by a per-leaf batch-axis select, so a
+  prefill block never perturbs a neighbour. The single-token fallback
+  (``prefill="token"``, the pre-split path: one prompt token per engine
+  step through the decode path) is kept and parity-tested token-for-token.
+- **decode** runs one token per step across all decoding slots; finished
+  rows are masked.
+
+Revocation is a first-class serving event, in two severities mirroring
+the paper's warn/fire split:
+
+- ``begin_drain`` (a provider *warning*): stop admitting, let short
+  decodes finish inside a token grace budget, and migrate long in-flight
+  decodes by **prefix replay** — the request keeps its generated tokens
+  and re-prefills ``prompt + generated`` on its next replica, so a warned
+  revocation costs prefill throughput, never decoded work.
+- ``revoke_slot`` (the *fire*, no warning): the slot's in-flight request
+  loses its decode state and regenerates from scratch; ``tokens_lost``
+  counts the discarded work — precisely the revocation overhead the
+  paper measures.
+
+Per-request TTFT/TPOT accounting rides on an injectable engine clock
+(``clock=``), so the SLO benchmarks can drive the engine on a simulated
+timeline while live drivers use the host clock.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import math
+import time
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.models.builder import Model, build_model
-from repro.train.step import make_serve_step
+from repro.models.builder import Model, build_model, cache_batch_axes
+from repro.train.step import make_prefill_step, make_serve_step
 
 PyTree = dict
 
@@ -40,92 +65,299 @@ def with_impls(model: Model, **impls: str) -> Model:
 
 
 @dataclasses.dataclass
+class RequestTiming:
+    """Engine-clock lifecycle timestamps + revocation cost counters.
+
+    TTFT/TPOT are the serving SLO primitives: time-to-first-token is
+    queueing + prefill as the user experiences it; time-per-output-token
+    is the steady decode cadence (including stalls while the engine runs
+    prefill blocks for neighbours).
+    """
+    t_enqueue: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_prefill_done: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_complete: Optional[float] = None
+    n_migrations: int = 0         # prefix-replay migrations (drain path)
+    n_restarts: int = 0           # from-scratch regenerations (hard revoke)
+    tokens_lost: int = 0          # decoded tokens discarded by hard revokes
+    tokens_replayed: int = 0      # prefix tokens re-prefilled by migrations
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_enqueue is None:
+            return None
+        return self.t_first_token - self.t_enqueue
+
+    def tpot_s(self, n_generated: int) -> Optional[float]:
+        if self.t_complete is None or self.t_first_token is None \
+                or n_generated < 2:
+            return None
+        return (self.t_complete - self.t_first_token) / (n_generated - 1)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_complete is None or self.t_enqueue is None:
+            return None
+        return self.t_complete - self.t_enqueue
+
+
+@dataclasses.dataclass
 class Request:
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # SLO metadata (engine-clock seconds; defaults = no SLO pressure)
+    arrival_s: float = 0.0
+    priority: int = 0                    # lower sorts first in SLOQueue
+    deadline_s: float = math.inf         # absolute engine-clock deadline
+    slo: str = "default"                 # class label for attainment stats
     # runtime
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    dropped: bool = False                # shed by admission control / expiry
+    timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
+    # prefix-replay source after a migration: the exact token stream an
+    # undisturbed engine would have consumed up to the migration point
+    _replay: Optional[List[int]] = None
+
+    @property
+    def prefill_tokens(self) -> List[int]:
+        return self._replay if self._replay is not None else self.prompt
+
+    @property
+    def remaining_tokens(self) -> int:
+        return self.max_new_tokens - len(self.generated)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params: PyTree, *, max_batch: int,
                  max_len: int, attn_impl: Optional[str] = None,
-                 recorder: Optional[obs.Recorder] = None):
+                 recorder: Optional[obs.Recorder] = None,
+                 queue=None, prefill: str = "block",
+                 prefill_block: int = 16,
+                 clock: Optional[Callable[[], float]] = None,
+                 on_long_prompt: str = "truncate",
+                 shared_fns: Optional[Tuple] = None):
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # Serving hot path: flip decode attention onto the Pallas kernel
             # (or back to xla) without asking callers to rebuild the model.
             model = with_impls(model, attn_impl=attn_impl)
+        if prefill not in ("block", "token"):
+            raise ValueError(f"prefill must be 'block' or 'token', "
+                             f"got {prefill!r}")
+        if on_long_prompt not in ("truncate", "reject"):
+            raise ValueError(f"on_long_prompt must be 'truncate' or "
+                             f"'reject', got {on_long_prompt!r}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.prefill_mode = prefill
+        self.prefill_block = max(1, min(prefill_block, max_len))
+        self.on_long_prompt = on_long_prompt
         self.cache = model.init_cache(max_batch, max_len)
-        self.step_fn = jax.jit(make_serve_step(model))
-        self._decode = jax.jit(model.decode)
+        # batch axis per cache leaf, from the cache layout itself — row
+        # resets and the prefill row-select must never guess shapes
+        self._batch_axes = cache_batch_axes(model, max_len)
+        if shared_fns is not None:
+            # replicas of one model share compiled steps (a new jit per
+            # replica would recompile identical programs per engine)
+            self.step_fn, self.prefill_fn = shared_fns
+        else:
+            self.step_fn = jax.jit(make_serve_step(model))
+            self.prefill_fn = jax.jit(
+                make_prefill_step(model, self._batch_axes))
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self._pending: List[Request] = []
-        self._prefill_cursor: Dict[int, int] = {}       # slot -> prompt index
+        if queue is None:
+            from repro.serving.queue import FIFOQueue
+            queue = FIFOQueue()
+        self.queue = queue
+        self._prefill_cursor: Dict[int, int] = {}   # slot -> prefill index
         self.tokens_decoded = 0
+        self.tokens_lost = 0          # decode work discarded by hard revokes
+        self.tokens_replayed = 0      # prefill work added by migrations
+        self.requests_rejected = 0    # shed at submit (admission/validation)
+        self.draining = False
         self.rec = recorder if recorder is not None else obs.NULL
+        self._epoch = time.monotonic()
+        self.clock = clock if clock is not None \
+            else (lambda: time.monotonic() - self._epoch)
         # request-lifecycle wall timestamps, keyed by rid: enqueue ->
         # admit -> prefill-done; spans are emitted retrospectively at
-        # phase boundaries (a request retires long after its prefill)
+        # phase boundaries (a request retires long after its prefill).
+        # Entries are popped on retire/drop so a long-lived engine's
+        # bookkeeping stays bounded by in-flight work.
         self._t_enqueue: Dict[int, float] = {}
         self._t_admit: Dict[int, float] = {}
         self._t_prefill_done: Dict[int, float] = {}
 
+    @property
+    def shared_fns(self) -> Tuple:
+        """Compiled (decode, prefill) pair; pass to sibling replicas."""
+        return (self.step_fn, self.prefill_fn)
+
+    @property
+    def _pending(self):
+        """Queue view (kept for tests/introspection; index 0 = next pop)."""
+        return self.queue
+
     # -- request management --------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self._pending.append(req)
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request. Returns False if admission control shed it
+        (queue at capacity, expired deadline, engine draining, or an
+        over-long prompt under ``on_long_prompt="reject"``)."""
+        now = self.clock()
+        limit = self.max_len - 1          # >=1 cache slot left for decode
+        if len(req.prompt) > limit:
+            if self.on_long_prompt == "reject":
+                return self._drop(req, "long_prompt")
+            # keep the most recent context, like any rolling-window server
+            req.prompt = list(req.prompt[-limit:])
+        if self.draining:
+            return self._drop(req, "draining")
+        if not self.queue.push(req, now=now):
+            return self._drop(req, "admission")
+        if req.timing.t_enqueue is None:
+            req.timing.t_enqueue = now
         rec = self.rec
         if rec.enabled:
             self._t_enqueue.setdefault(req.rid, rec.now())
             rec.instant(obs.EV_ENQUEUE, cat=obs.CAT_SERVE,
                         track=f"req{req.rid}", prompt_len=len(req.prompt),
-                        max_new_tokens=req.max_new_tokens)
+                        max_new_tokens=req.max_new_tokens, slo=req.slo)
             rec.metrics.counter("requests_total").inc()
+        return True
+
+    def _drop(self, req: Request, reason: str) -> bool:
+        req.dropped = True
+        self.requests_rejected += 1
+        rec = self.rec
+        if rec.enabled:
+            rec.instant(obs.EV_REJECT, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}", reason=reason)
+            rec.metrics.counter("requests_rejected", reason=reason).inc()
+        return False
 
     def _reset_row(self, row: int) -> None:
         """Zero every cache leaf at this batch row (a new occupant must not
-        see the previous request's SSM/RWKV state or KV remnants)."""
-        def zero_row(leaf):
-            if leaf.ndim == 1 and leaf.shape[0] == self.max_batch:
-                return leaf.at[row].set(0)
-            for ax in (1, 2):
-                if leaf.ndim > ax and leaf.shape[ax] == self.max_batch:
-                    idx = (slice(None),) * ax + (row,)
-                    return leaf.at[idx].set(0)
-            return leaf
-        self.cache = jax.tree.map(zero_row, self.cache)
+        see the previous request's SSM/RWKV state or KV remnants). The
+        batch axis comes from the cache layout metadata, never from shape
+        matching — a heads/layers dim that collides with ``max_batch``
+        cannot divert the reset onto the wrong axis."""
+        def zero_row(ax, leaf):
+            idx = (slice(None),) * ax + (row,)
+            return leaf.at[idx].set(0)
+        self.cache = jax.tree.map(zero_row, self._batch_axes, self.cache)
 
     def _admit(self) -> None:
+        if self.draining:
+            return                        # doomed replica: no new work
         rec = self.rec
+        now = self.clock()
         for i, slot in enumerate(self.slots):
-            if slot is None and self._pending:
-                req = self._pending.pop(0)
-                self.slots[i] = req
-                self._prefill_cursor[i] = 0
-                self._reset_row(i)
-                if rec.enabled:
-                    self._t_admit[req.rid] = rec.now()
-                    rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
-                                track=f"slot{i}", rid=req.rid)
+            if slot is not None or not len(self.queue):
+                continue
+            req = self.queue.pop(now=now)
+            if req is None:               # backlog was all expired work
+                break
+            self.slots[i] = req
+            self._prefill_cursor[i] = 0
+            self._reset_row(i)
+            req.timing.t_admit = now
+            if rec.enabled:
+                self._t_admit[req.rid] = rec.now()
+                rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
+                            track=f"slot{i}", rid=req.rid)
 
-    def revoke_slot(self, slot: int) -> Optional[Request]:
+    # -- revocation: drain (warned) and hard revoke (fired) ------------------
+    def begin_drain(self, *, grace_tokens: int = 4) -> List[Request]:
+        """Revocation *warning* for this replica: admission stops, decodes
+        within ``grace_tokens`` of completion finish here, and longer
+        in-flight requests are migrated out via prefix replay — each
+        returned request keeps its ``generated`` tokens and carries a
+        ``_replay`` stream that reproduces the undisturbed cache state on
+        whatever replica resubmits it. Queued (not yet admitted) work is
+        returned too. The caller routes the returned requests elsewhere.
+        """
+        self.draining = True
+        rec = self.rec
+        migrated: List[Request] = []
+        if rec.enabled:
+            rec.instant(obs.EV_REVOKE_WARN, cat=obs.CAT_SERVE,
+                        track="engine", grace_tokens=grace_tokens)
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            in_prefill = self._prefill_cursor.get(i, 0) \
+                < len(req.prefill_tokens)
+            if not in_prefill and req.remaining_tokens <= grace_tokens:
+                continue                  # short decode: finish under grace
+            self._migrate_out(i, req)
+            migrated.append(req)
+        migrated.extend(self.queue.drain_all())
+        return migrated
+
+    def _migrate_out(self, slot: int, req: Request) -> None:
+        """Evict with prefix replay: the replay stream is exactly the
+        token sequence an undisturbed engine consumed — prompt, the
+        re-fed final prompt token, then all but the last generated token
+        (the last one becomes the resume decode input)."""
+        if req.generated:
+            req._replay = (list(req.prompt) + [req.prompt[-1]]
+                           + list(req.generated[:-1]))
+            replay_cost = len(req._replay)
+        else:
+            req._replay = None            # still in prefill: plain restart
+            replay_cost = 0
+        req.timing.n_migrations += 1
+        req.timing.tokens_replayed += replay_cost
+        self.tokens_replayed += replay_cost
+        self.slots[slot] = None
+        self._prefill_cursor.pop(slot, None)
+        # lifecycle restarts at admission on the target replica
+        self._t_admit.pop(req.rid, None)
+        self._t_prefill_done.pop(req.rid, None)
+        rec = self.rec
+        if rec.enabled:
+            rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}", slot=slot, mode="replay",
+                        kept_tokens=len(req.generated),
+                        replay_tokens=replay_cost)
+            rec.metrics.counter("requests_migrated").inc()
+
+    @property
+    def drain_complete(self) -> bool:
+        return self.draining and not self.has_work()
+
+    def hard_revoke(self) -> List[Request]:
+        """The revocation *fired* (no or expired warning): every in-flight
+        request loses its decode state and must regenerate from scratch;
+        queued work is evacuated untouched. Returns everything displaced."""
+        displaced: List[Request] = []
+        for i in range(self.max_batch):
+            req = self.revoke_slot(i, _requeue=False)
+            if req is not None and not req.done:
+                displaced.append(req)
+        displaced.extend(self.queue.drain_all())
+        self.draining = True
+        return displaced
+
+    def revoke_slot(self, slot: int, _requeue: bool = True
+                    ) -> Optional[Request]:
         """Membership shrink mid-serve: the serving analogue of a worker
-        revocation. The slot's in-flight request loses its decode state
-        (the cache row is reconstructible, never checkpointed) and is
-        re-enqueued at the FRONT of the queue to regenerate from scratch;
-        the emptied row is masked out exactly like an emptied training
-        slot — no recompilation, the next occupant resets the row.
+        revocation firing without (usable) warning. The slot's in-flight
+        request loses its decode state (the cache row is reconstructible,
+        never checkpointed) and is re-enqueued at the FRONT of the queue
+        to regenerate from scratch; the emptied row is masked out exactly
+        like an emptied training slot — no recompilation, the next
+        occupant resets the row.
 
         Returns the displaced request (None if the slot was empty).
         ``tokens_decoded`` keeps counting the lost tokens: they were real
         decode work, which is precisely the revocation overhead the paper
-        measures.
+        measures (``tokens_lost`` tallies it explicitly).
         """
         req = self.slots[slot]
         self.slots[slot] = None
@@ -139,14 +371,22 @@ class ServeEngine:
         if req is not None and not req.done:
             if rec.enabled:
                 rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
-                            track=f"req{req.rid}", slot=slot,
+                            track=f"req{req.rid}", slot=slot, mode="restart",
                             lost_tokens=len(req.generated))
                 rec.metrics.counter("requests_migrated").inc()
-                # regeneration restarts the lifecycle from the queue
-                self._t_admit.pop(req.rid, None)
-                self._t_prefill_done.pop(req.rid, None)
+            # regeneration restarts the lifecycle from the queue; the
+            # bookkeeping reset must not depend on whether a recorder is
+            # attached, or toggling observability changes engine state
+            self._t_admit.pop(req.rid, None)
+            self._t_prefill_done.pop(req.rid, None)
+            lost = len(req.generated)
+            req.timing.tokens_lost += lost
+            req.timing.n_restarts += 1
+            self.tokens_lost += lost
             req.generated = []
-            self._pending.insert(0, req)
+            req._replay = None
+            if _requeue:
+                self.queue.requeue_front(req)
         return req
 
     @property
@@ -154,26 +394,99 @@ class ServeEngine:
         return sum(s is not None for s in self.slots)
 
     def has_work(self) -> bool:
-        return self.n_active > 0 or bool(self._pending)
+        return self.n_active > 0 or bool(len(self.queue))
 
     # -- one engine step -----------------------------------------------------
     def step(self) -> None:
-        """Admit, build the token row per slot, run serve_step, retire."""
+        """Admit, then run ONE phase: a prefill block if any slot still
+        holds un-ingested prompt (blocked mode), else a decode step. The
+        token-mode fallback runs the legacy combined step (prefill rows
+        advance one prompt token while decode rows generate)."""
         self._admit()
         if self.n_active == 0:
             return
+        prefill_rows = [i for i, req in enumerate(self.slots)
+                        if req is not None and self._prefill_cursor[i]
+                        < len(req.prefill_tokens)]
+        if self.prefill_mode == "block" and prefill_rows:
+            self._step_prefill_block(prefill_rows)
+        else:
+            self._step_token()
+
+    def _prefill_room(self, row: int) -> int:
+        """Cache positions this row may still write (overflow guard): a
+        prefill must stop before ``max_len`` even if a replay stream or a
+        mid-stream resubmit would run past it."""
+        pos = int(np.asarray(self.cache["pos"])[row])
+        return max(self.max_len - pos, 0)
+
+    def _finish_prefill(self, row: int, req: Request) -> None:
+        now = self.clock()
+        req.timing.t_prefill_done = now
+        rec = self.rec
+        if rec.enabled:
+            wnow = rec.now()
+            t0 = self._t_admit.get(req.rid, wnow)
+            rec.span_at(obs.EV_PREFILL, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}", t_wall=t0,
+                        dur_wall=wnow - t0, slot=row,
+                        tokens=len(req.prefill_tokens))
+            self._t_prefill_done[req.rid] = wnow
+            rec.metrics.counter("tokens_prefilled").inc(
+                len(req.prefill_tokens))
+
+    def _step_prefill_block(self, rows: List[int]) -> None:
+        T = self.prefill_block
+        tokens = np.zeros((self.max_batch, T), np.int32)
+        n_valid = np.zeros((self.max_batch,), np.int32)
+        for i in rows:
+            req = self.slots[i]
+            src = req.prefill_tokens
+            cur = self._prefill_cursor[i]
+            k = min(T, len(src) - cur, self._prefill_room(i))
+            if k <= 0:
+                # overflow guard tripped mid-prefill: cut the prompt here
+                # and fall through to decode (the retire guard ends it)
+                self._prefill_cursor[i] = len(src)
+                self._finish_prefill(i, req)
+                continue
+            tokens[i, :k] = src[cur:cur + k]
+            n_valid[i] = k
+        if not n_valid.any():
+            return
+        self.cache = self.prefill_fn(self.params, self.cache,
+                                     jnp.asarray(tokens),
+                                     jnp.asarray(n_valid))
+        for i in rows:
+            req = self.slots[i]
+            k = int(n_valid[i])
+            if k <= 0:
+                continue
+            self._prefill_cursor[i] += k
+            if self._prefill_cursor[i] >= len(req.prefill_tokens):
+                self._finish_prefill(i, req)
+
+    def _step_token(self) -> None:
+        """Legacy combined step: prefill rows feed one prompt token,
+        decode rows feed their last output; one dispatch for both."""
         tokens = np.zeros((self.max_batch, 1), np.int32)
         in_prefill = np.zeros((self.max_batch,), bool)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             cur = self._prefill_cursor[i]
-            if cur < len(req.prompt):
-                tokens[i, 0] = req.prompt[cur]
-                in_prefill[i] = True
-            else:
-                tokens[i, 0] = (req.generated[-1] if req.generated
-                                else req.prompt[-1])
+            src = req.prefill_tokens
+            if cur < len(src):
+                if self._prefill_room(i) <= 0:
+                    # overflow guard: stop feeding prompt, enter decode
+                    self._prefill_cursor[i] = len(src)
+                    self._finish_prefill(i, req)
+                else:
+                    tokens[i, 0] = src[cur]
+                    in_prefill[i] = True
+                    continue
+            tokens[i, 0] = (req.generated[-1] if req.generated
+                            else req.prompt[-1])
         nxt, self.cache = self.step_fn(self.params, self.cache,
                                        jnp.asarray(tokens))
         nxt = np.asarray(nxt)
@@ -185,47 +498,97 @@ class ServeEngine:
                 continue
             if in_prefill[i]:
                 self._prefill_cursor[i] += 1
-                if rec.enabled and self._prefill_cursor[i] >= len(req.prompt):
-                    now = rec.now()
-                    t0 = self._t_admit.get(req.rid, now)
-                    rec.span_at(obs.EV_PREFILL, cat=obs.CAT_SERVE,
-                                track=f"req{req.rid}", t_wall=t0,
-                                dur_wall=now - t0, slot=i,
-                                tokens=len(req.prompt))
-                    self._t_prefill_done[req.rid] = now
-                    rec.metrics.counter("tokens_prefilled").inc(
-                        len(req.prompt))
+                if self._prefill_cursor[i] >= len(req.prefill_tokens):
+                    self._finish_prefill(i, req)
                 continue
-            tok = int(nxt[i, 0])
-            req.generated.append(tok)
-            self.tokens_decoded += 1
+            self._accept_token(i, req, int(nxt[i, 0]))
             n_dec += 1
-            pos = int(np.asarray(self.cache["pos"])[i])
-            if ((req.eos_id is not None and tok == req.eos_id)
-                    or len(req.generated) >= req.max_new_tokens
-                    or pos >= self.max_len - 1):
-                req.done = True
-                self.slots[i] = None
-                if rec.enabled:
-                    now = rec.now()
-                    t0 = self._t_prefill_done.get(req.rid, now)
-                    rec.span_at(obs.EV_DECODE, cat=obs.CAT_SERVE,
-                                track=f"req{req.rid}", t_wall=t0,
-                                dur_wall=now - t0, slot=i,
-                                tokens=len(req.generated))
-                    rec.instant(obs.EV_COMPLETE, cat=obs.CAT_SERVE,
-                                track=f"req{req.rid}",
-                                tokens=len(req.generated))
-                    rec.metrics.counter("requests_completed").inc()
-                    t_q = self._t_enqueue.get(req.rid, now)
-                    rec.metrics.histogram("request_latency_ms").observe(
-                        (now - t_q) * 1e3)
         if rec.enabled and n_dec:
             rec.metrics.counter("tokens_decoded").inc(n_dec)
 
-    def run_to_completion(self, max_steps: int = 10_000) -> int:
+    def _step_decode(self) -> None:
+        """Pure decode step (blocked mode): every active row is past
+        prefill; feed last outputs, accept one token per row."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tokens[i, 0] = (req.generated[-1] if req.generated
+                            else req.prompt[-1])
+        nxt, self.cache = self.step_fn(self.params, self.cache,
+                                       jnp.asarray(tokens))
+        nxt = np.asarray(nxt)
+        n_dec = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._accept_token(i, req, int(nxt[i, 0]))
+            n_dec += 1
+        if self.rec.enabled and n_dec:
+            self.rec.metrics.counter("tokens_decoded").inc(n_dec)
+
+    def _accept_token(self, i: int, req: Request, tok: int) -> None:
+        req.generated.append(tok)
+        self.tokens_decoded += 1
+        if req.timing.t_first_token is None:
+            req.timing.t_first_token = self.clock()
+        pos = int(np.asarray(self.cache["pos"])[i])
+        if ((req.eos_id is not None and tok == req.eos_id)
+                or len(req.generated) >= req.max_new_tokens
+                or pos >= self.max_len - 1):
+            self._retire(i, req)
+
+    def _retire(self, i: int, req: Request) -> None:
+        req.done = True
+        req.timing.t_complete = self.clock()
+        self.slots[i] = None
+        self._prefill_cursor.pop(i, None)
+        rec = self.rec
+        if rec.enabled:
+            now = rec.now()
+            t0 = self._t_prefill_done.get(req.rid, now)
+            rec.span_at(obs.EV_DECODE, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}", t_wall=t0,
+                        dur_wall=now - t0, slot=i,
+                        tokens=len(req.generated))
+            rec.instant(obs.EV_COMPLETE, cat=obs.CAT_SERVE,
+                        track=f"req{req.rid}",
+                        tokens=len(req.generated))
+            rec.metrics.counter("requests_completed").inc()
+            t_q = self._t_enqueue.get(req.rid, now)
+            rec.metrics.histogram("request_latency_ms").observe(
+                (now - t_q) * 1e3)
+            ttft = req.timing.ttft_s
+            if ttft is not None:
+                rec.metrics.histogram("ttft_ms").observe(ttft * 1e3)
+            tpot = req.timing.tpot_s(len(req.generated))
+            if tpot is not None:
+                rec.metrics.histogram("tpot_ms").observe(tpot * 1e3)
+        # completion ends the lifecycle: drop the bookkeeping entries so
+        # a long-lived engine does not grow per-request state unboundedly
+        self._t_enqueue.pop(req.rid, None)
+        self._t_admit.pop(req.rid, None)
+        self._t_prefill_done.pop(req.rid, None)
+
+    def run_to_completion(self, max_steps: int = 10_000,
+                          on_budget: str = "raise") -> int:
+        """Step until idle. If ``max_steps`` is exhausted with work still
+        pending, ``on_budget`` picks the failure mode: ``"raise"``
+        (default — silent half-finished batches are bugs), ``"warn"``, or
+        ``"ignore"`` for callers interleaving their own stepping."""
+        if on_budget not in ("raise", "warn", "ignore"):
+            raise ValueError(f"on_budget must be 'raise', 'warn' or "
+                             f"'ignore', got {on_budget!r}")
         steps = 0
         while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
+        if self.has_work():
+            msg = (f"run_to_completion exhausted max_steps={max_steps} with "
+                   f"{self.n_active} active slot(s) and {len(self.queue)} "
+                   f"queued request(s) remaining")
+            if on_budget == "raise":
+                raise RuntimeError(msg)
+            if on_budget == "warn":
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return steps

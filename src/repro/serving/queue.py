@@ -1,0 +1,130 @@
+"""Request queues for the serving engine: FIFO and SLO-aware.
+
+Two interchangeable queue disciplines behind one small interface
+(``push`` / ``pop`` / ``requeue_front`` / ``drain_all`` / ``__len__``):
+
+``FIFOQueue``  the legacy discipline on a ``collections.deque`` — O(1)
+               admits (the old plain-list ``_pending.pop(0)`` was O(n)
+               per admit) with ``appendleft`` re-enqueue so a revoked
+               request regenerates before newly-arrived work.
+
+``SLOQueue``   deadline/priority ordering plus admission control. Pops
+               come out ordered by ``(priority, deadline_s, seq)`` —
+               lower priority value first, earlier deadline first, FIFO
+               within ties — regardless of push order. ``capacity``
+               bounds the backlog (pushes beyond it are rejected, the
+               serving analogue of load shedding), and expired requests
+               (``now > deadline_s``) are dropped at pop time instead of
+               burning decode slots on work that already missed its SLO.
+               Requests re-admitted after a revocation (``requeue_front``)
+               carry their original priority but sort ahead of same-key
+               arrivals: they already paid queueing delay once.
+
+The engine never sees the discipline — both queues mask the same way a
+serving slot does, so swapping SLO scheduling in/out never touches the
+decode path.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import deque
+from typing import Callable, List, Optional
+
+from repro.serving.engine import Request
+
+
+class FIFOQueue:
+    """Arrival-order queue on a deque; the default engine discipline."""
+
+    def __init__(self):
+        self._items: deque = deque()
+
+    def push(self, req: Request, *, now: float = 0.0) -> bool:
+        self._items.append(req)
+        return True
+
+    def requeue_front(self, req: Request) -> None:
+        self._items.appendleft(req)
+
+    def pop(self, *, now: float = 0.0) -> Optional[Request]:
+        return self._items.popleft() if self._items else None
+
+    def drain_all(self) -> List[Request]:
+        out = list(self._items)
+        self._items.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __getitem__(self, i: int) -> Request:
+        return self._items[i]
+
+
+class SLOQueue:
+    """Deadline/priority-ordered queue with admission control.
+
+    ``on_drop`` (optional callable) observes every request rejected at
+    admission or expired at pop, so the engine can count SLO losses that
+    never reached a slot.
+    """
+
+    # re-admitted requests sort ahead of fresh ones at the same
+    # (priority, deadline): their seq is negated below zero
+    _front = itertools.count(-1, -1)
+
+    def __init__(self, *, capacity: Optional[int] = None,
+                 drop_expired: bool = True,
+                 on_drop: Optional[Callable[[Request, str], None]] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.drop_expired = drop_expired
+        self.on_drop = on_drop
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def _key(self, req: Request, seq: int):
+        deadline = req.deadline_s if req.deadline_s is not None else math.inf
+        return (req.priority, deadline, seq)
+
+    def push(self, req: Request, *, now: float = 0.0) -> bool:
+        if self.capacity is not None and len(self._heap) >= self.capacity:
+            if self.on_drop:
+                self.on_drop(req, "capacity")
+            return False
+        if self.drop_expired and now > req.deadline_s:
+            if self.on_drop:
+                self.on_drop(req, "expired")
+            return False
+        heapq.heappush(self._heap, (*self._key(req, next(self._seq)), req))
+        return True
+
+    def requeue_front(self, req: Request) -> None:
+        """Re-admit a revoked/migrated request ahead of same-key arrivals
+        (never subject to capacity: it was already admitted once)."""
+        heapq.heappush(self._heap,
+                       (*self._key(req, next(SLOQueue._front)), req))
+
+    def pop(self, *, now: float = 0.0) -> Optional[Request]:
+        while self._heap:
+            *_, req = heapq.heappop(self._heap)
+            if self.drop_expired and now > req.deadline_s:
+                if self.on_drop:
+                    self.on_drop(req, "expired")
+                continue
+            return req
+        return None
+
+    def drain_all(self) -> List[Request]:
+        out = [entry[-1] for entry in sorted(self._heap)]
+        self._heap.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __getitem__(self, i: int) -> Request:
+        return [entry[-1] for entry in sorted(self._heap)][i]

@@ -15,6 +15,10 @@ replay   vectorized trace playback for the batched MC engine
          (``ReplayContext``): bootstrap-resampled lifetime windows and
          piecewise-constant price integration, keeping the trial axis an
          array axis.
+requests the demand-side twin: seeded inference *request* traces
+         (diurnal + bursty Poisson arrivals with SLO classes) that the
+         serving engine, ``launch/serve.py``, and
+         ``benchmarks/serve_frontier.py`` replay.
 
 ``simulate_many(..., trace=...)`` and the policy layer
 (``core/policy.py``) consume these.
@@ -24,6 +28,8 @@ from repro.traces.schema import (EVENT_KINDS, Trace,  # noqa: F401
 from repro.traces.synth import (default_trace_suite,  # noqa: F401
                                 synthetic_trace, trace_from_model)
 from repro.traces.replay import ReplayContext  # noqa: F401
+from repro.traces.requests import (RequestEvent, RequestTrace,  # noqa: F401
+                                   synthetic_request_trace)
 
 
 def load_trace(spec: str, seed: int = 0) -> Trace:

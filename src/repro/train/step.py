@@ -205,3 +205,48 @@ def make_serve_step(model: Model, *, sample: str = "greedy"
         return nxt[:, None], cache
 
     return serve_step
+
+
+def make_prefill_step(model: Model, batch_axes: PyTree
+                      ) -> Callable[..., PyTree]:
+    """Blocked prefill: ingest up to T prompt tokens per row in ONE
+    compiled dispatch instead of one engine step per token.
+
+    ``(params, cache, tokens (B, T), n_valid (B,)) -> cache``. The block
+    is a ``lax.scan`` over the same decode cell ``make_serve_step`` runs,
+    so the resulting cache is token-for-token identical to the
+    single-token fallback for every family — including SSM/RWKV/hybrid
+    recurrent state, which a separate attention-only prefill kernel would
+    get wrong. Rows advance only while their scan index is below
+    ``n_valid``: a per-leaf select on the batch axis (``batch_axes``,
+    from :func:`repro.models.builder.cache_batch_axes`) freezes decode
+    rows and already-finished prefill rows, so mixed-phase batches share
+    the dispatch safely. Prefill logits are discarded — the engine's
+    decode phase re-feeds the final prompt token, exactly like the
+    fallback path, so both paths stay parity-testable.
+    """
+
+    def select_rows(ax: int, mask: jax.Array, new: jax.Array,
+                    old: jax.Array) -> jax.Array:
+        m = mask.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+        return jnp.where(m, new, old)
+
+    def prefill_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                     n_valid: jax.Array) -> PyTree:
+        T = tokens.shape[1]
+
+        def body(cache, xs):
+            tok, t = xs                       # tok: (B,), t: scalar index
+            adv = t < n_valid                 # rows consuming this token
+            _, new_cache = model.decode(params, cache,
+                                        {"tokens": tok[:, None]})
+            cache = jax.tree.map(
+                lambda ax, new, old: select_rows(ax, adv, new, old),
+                batch_axes, new_cache, cache)
+            return cache, None
+
+        cache, _ = jax.lax.scan(body, cache,
+                                (tokens.T, jnp.arange(T, dtype=jnp.int32)))
+        return cache
+
+    return prefill_step

@@ -1,0 +1,85 @@
+"""Synthetic request traces: determinism, arrival shaping, round-trip."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.traces.requests import (RequestEvent, RequestTrace, SLO_CLASSES,
+                                   synthetic_request_trace)
+
+
+def test_deterministic_by_seed():
+    a = synthetic_request_trace(seed=7)
+    b = synthetic_request_trace(seed=7)
+    assert a.events == b.events
+    assert synthetic_request_trace(seed=8).events != a.events
+
+
+def test_events_sorted_and_in_horizon():
+    tr = synthetic_request_trace(seed=1, horizon_s=300.0)
+    ts = [e.t_s for e in tr.events]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < 300.0 for t in ts)
+    assert all(1 <= e.prompt_len <= 64 for e in tr.events)
+    assert all(1 <= e.max_new_tokens <= 48 for e in tr.events)
+    labels = {label for label, *_ in SLO_CLASSES}
+    assert all(e.slo in labels for e in tr.events)
+    assert tr.n_requests == len(tr.events)
+    assert tr.rate_per_s() == pytest.approx(len(ts) / 300.0)
+
+
+def test_burst_window_raises_arrival_rate():
+    calm = synthetic_request_trace(seed=3, horizon_s=1000.0,
+                                   diurnal_amplitude=0.0)
+    burst = synthetic_request_trace(seed=3, horizon_s=1000.0,
+                                    diurnal_amplitude=0.0,
+                                    bursts=((0.4, 0.6, 4.0),))
+
+    def in_window(tr):
+        return sum(400.0 <= e.t_s < 600.0 for e in tr.events)
+
+    def outside(tr):
+        return len(tr.events) - in_window(tr)
+
+    # the burst multiplies the rate only inside its window; thinning
+    # keeps the outside-rate statistically unchanged
+    assert in_window(burst) > 2.5 * in_window(calm)
+    assert abs(outside(burst) - outside(calm)) < 0.5 * outside(calm)
+
+
+def test_diurnal_shape_concentrates_in_peak_half():
+    tr = synthetic_request_trace(seed=5, horizon_s=1000.0,
+                                 base_rate_per_s=1.0,
+                                 diurnal_amplitude=0.9)
+    # sin peaks in the first half of one full period
+    first = sum(e.t_s < 500.0 for e in tr.events)
+    assert first > 0.6 * len(tr.events)
+
+
+def test_jsonl_round_trip(tmp_path):
+    tr = synthetic_request_trace(seed=11, horizon_s=120.0)
+    path = str(tmp_path / "reqs.jsonl")
+    tr.to_jsonl(path)
+    back = RequestTrace.from_jsonl(path)
+    assert back.name == tr.name and back.horizon_s == tr.horizon_s
+    assert back.seed == tr.seed
+    assert back.events == tr.events     # lossless, inf deadlines included
+
+
+def test_unsorted_events_rejected():
+    evs = (RequestEvent(5.0, 0, 4, 4), RequestEvent(1.0, 1, 4, 4))
+    with pytest.raises(ValueError, match="sorted"):
+        RequestTrace(name="bad", horizon_s=10.0, events=evs)
+
+
+def test_amplitude_validation():
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        synthetic_request_trace(seed=0, diurnal_amplitude=1.5)
+
+
+def test_slo_metadata_round_trips_defaults():
+    ev = RequestEvent(1.0, 0, 8, 16)
+    d = ev.to_json()
+    assert "slo" not in d and "deadline_rel_s" not in d   # compact default
+    assert RequestEvent.from_json(d) == ev
+    assert RequestEvent.from_json(d).deadline_rel_s == math.inf

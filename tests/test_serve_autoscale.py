@@ -1,0 +1,64 @@
+"""Replica autoscaler: core/policy machinery reused for serving."""
+import pytest
+
+from repro.serving.autoscale import (ReplicaAutoscaler, ReplicaDecision,
+                                     ServeLoad)
+
+
+def _load(util, queue=0, replicas=2, slots=4, t=0.0, current=None):
+    return ServeLoad(t_s=t, utilization=util, queue_depth=queue,
+                     n_replicas=replicas, slots_per_replica=slots,
+                     current=current)
+
+
+def test_scales_up_under_backlog():
+    p = ReplicaAutoscaler(max_replicas=8, target_util=0.75)
+    # 2 replicas x 4 slots fully busy + 12 queued = 20 demand slots;
+    # 20 / (4 * 0.75) = 6.67 -> 7 replicas
+    dec = p.act(_load(1.0, queue=12))
+    assert dec == ReplicaDecision(7)
+
+
+def test_scales_down_when_idle():
+    p = ReplicaAutoscaler(min_replicas=1)
+    assert p.act(_load(0.0, replicas=4)).n_replicas == 1
+    # light load: 0.1 * 4 * 4 = 1.6 busy slots -> 1 replica suffices
+    assert p.decide(_load(0.1, replicas=4)).n_replicas == 1
+
+
+def test_clamped_to_bounds():
+    p = ReplicaAutoscaler(min_replicas=2, max_replicas=4)
+    assert p.decide(_load(1.0, queue=1000)).n_replicas == 4
+    assert p.decide(_load(0.0)).n_replicas == 2
+
+
+def test_deadband_hysteresis_via_act():
+    """Policy.act fills obs.current from its own incumbent, so a 1-replica
+    wobble inside the deadband never thrashes the fleet."""
+    p = ReplicaAutoscaler(deadband=1, max_replicas=8)
+    first = p.act(_load(1.0, queue=4))         # 12 demand / 3 = 4 replicas
+    assert first.n_replicas == 4
+    # slightly hotter: raw target 5, within deadband of incumbent 4
+    again = p.act(_load(1.0, queue=7))
+    assert again.n_replicas == 4
+    assert p.switches == 0                     # one logged decision, no change
+    # far hotter: outside the deadband, the fleet moves
+    assert p.act(_load(1.0, queue=26)).n_replicas > 5
+    assert p.switches == 1
+
+
+def test_decision_log_and_reset():
+    import numpy as np
+    p = ReplicaAutoscaler()
+    p.act(_load(1.0, queue=12, t=0.0))
+    p.act(_load(0.0, t=60.0))
+    assert [d.n_replicas for _, d in p.decision_log] == [7, 1]
+    p.reset(np.random.default_rng(0))
+    assert p.decision_log == [] and p.switches == 0
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="target_util"):
+        ReplicaAutoscaler(target_util=0.0)
+    with pytest.raises(ValueError, match="min_replicas"):
+        ReplicaAutoscaler(min_replicas=3, max_replicas=2)

@@ -1,0 +1,123 @@
+"""Request-queue disciplines: FIFO deque semantics + SLO ordering,
+admission control, and expiry. Pure Python — no model, no jax."""
+import math
+
+import pytest
+
+from repro.serving import FIFOQueue, Request, SLOQueue
+
+
+def _req(rid, priority=0, deadline=math.inf):
+    return Request(rid=rid, prompt=[1, 2, 3], priority=priority,
+                   deadline_s=deadline)
+
+
+def _pop_all(q, now=0.0):
+    out = []
+    while len(q):
+        out.append(q.pop(now=now))
+    return out
+
+
+# -- FIFO --------------------------------------------------------------------
+
+def test_fifo_order_and_front_requeue():
+    q = FIFOQueue()
+    a, b, c = _req(0), _req(1), _req(2)
+    for r in (a, b, c):
+        assert q.push(r)
+    assert q[0] is a and len(q) == 3
+    got = q.pop()
+    assert got is a
+    q.requeue_front(a)                  # revoked work regenerates first
+    assert q[0] is a
+    assert _pop_all(q) == [a, b, c]
+
+
+def test_fifo_drain_all():
+    q = FIFOQueue()
+    reqs = [_req(i) for i in range(4)]
+    for r in reqs:
+        q.push(r)
+    assert q.drain_all() == reqs
+    assert len(q) == 0 and q.pop() is None
+
+
+# -- SLO ---------------------------------------------------------------------
+
+def test_slo_orders_by_priority_then_deadline():
+    q = SLOQueue()
+    late_low = _req(0, priority=1, deadline=10.0)
+    early_low = _req(1, priority=1, deadline=5.0)
+    hi = _req(2, priority=0, deadline=100.0)
+    no_ddl = _req(3, priority=1)
+    for r in (late_low, early_low, hi, no_ddl):
+        assert q.push(r)
+    # priority first (lower wins), then earlier deadline, then FIFO
+    assert _pop_all(q) == [hi, early_low, late_low, no_ddl]
+
+
+def test_slo_fifo_within_ties():
+    q = SLOQueue()
+    reqs = [_req(i, priority=0, deadline=50.0) for i in range(5)]
+    for r in reqs:
+        q.push(r)
+    assert _pop_all(q) == reqs
+
+
+def test_slo_capacity_admission_control():
+    drops = []
+    q = SLOQueue(capacity=2, on_drop=lambda r, why: drops.append((r, why)))
+    assert q.push(_req(0)) and q.push(_req(1))
+    shed = _req(2)
+    assert not q.push(shed)
+    assert drops == [(shed, "capacity")]
+    assert len(q) == 2
+
+
+def test_slo_expired_dropped_at_push_and_pop():
+    drops = []
+    q = SLOQueue(on_drop=lambda r, why: drops.append((r.rid, why)))
+    assert not q.push(_req(0, deadline=1.0), now=2.0)   # dead on arrival
+    assert q.push(_req(1, deadline=1.0), now=0.5)
+    assert q.push(_req(2, deadline=10.0), now=0.5)
+    # rid 1's deadline passes while queued: pop skips it, never burns a slot
+    assert q.pop(now=5.0).rid == 2
+    assert drops == [(0, "expired"), (1, "expired")]
+    assert len(q) == 0
+
+
+def test_slo_drop_expired_off_keeps_late_work():
+    q = SLOQueue(drop_expired=False)
+    q.push(_req(0, deadline=1.0), now=2.0)
+    assert q.pop(now=5.0).rid == 0
+
+
+def test_slo_front_requeue_beats_same_key_arrivals():
+    q = SLOQueue(capacity=1)
+    fresh = _req(0, priority=1, deadline=50.0)
+    assert q.push(fresh)
+    revoked = _req(1, priority=1, deadline=50.0)
+    q.requeue_front(revoked)            # same (priority, deadline) key
+    assert len(q) == 2                  # never subject to capacity
+    assert q.pop() is revoked           # already paid queueing delay once
+    assert q.pop() is fresh
+    hi = _req(2, priority=0)
+    q.push(hi)
+    q.requeue_front(_req(3, priority=1))
+    assert q.pop() is hi                # priority still dominates
+
+
+def test_slo_drain_all_sorted():
+    q = SLOQueue()
+    a = _req(0, priority=1, deadline=5.0)
+    b = _req(1, priority=0, deadline=50.0)
+    for r in (a, b):
+        q.push(r)
+    assert q.drain_all() == [b, a]
+    assert len(q) == 0
+
+
+def test_slo_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        SLOQueue(capacity=0)

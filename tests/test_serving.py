@@ -171,3 +171,166 @@ def test_eos_early_stop(setup):
     eng2.run_to_completion()
     assert req2.generated[-1] == tok0
     assert len(req2.generated) < 40
+
+
+def test_block_and_token_prefill_parity(setup):
+    """The blocked prefill scan must be token-for-token identical to the
+    legacy one-token-per-step fallback — including recurrent state
+    (rwkv6 in the fixture), which a KV-only prefill shortcut would miss."""
+    cfg, model, params = setup
+    reqs_b = _reqs(cfg, 5, seed=11, plen=7)
+    reqs_t = _reqs(cfg, 5, seed=11, plen=7)
+    eng_b = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill="block", prefill_block=3)
+    eng_t = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill="token")
+    for r in reqs_b:
+        eng_b.submit(r)
+    for r in reqs_t:
+        eng_t.submit(r)
+    eng_b.run_to_completion()
+    eng_t.run_to_completion()
+    for rb, rt in zip(reqs_b, reqs_t):
+        assert rb.done and rb.generated == rt.generated, (
+            f"rid {rb.rid}: block {rb.generated} != token {rt.generated}")
+
+
+@pytest.mark.parametrize("prefill", ["block", "token"])
+def test_long_prompt_does_not_overflow_cache(setup, prefill):
+    """Regression: a prompt longer than max_len used to keep writing past
+    the cache (the retire guard was skipped for prefill rows). Truncation
+    at submit keeps the most recent max_len-1 tokens, and the decode pos
+    never escapes the cache."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=8,
+                      prefill=prefill)
+    rng = np.random.default_rng(6)
+    long_prompt = rng.integers(1, cfg.vocab_size, size=(20,)).tolist()
+    req = Request(rid=0, prompt=long_prompt, max_new_tokens=10)
+    assert eng.submit(req)
+    assert len(req.prompt) == 7                 # max_len - 1, tail kept
+    assert req.prompt == long_prompt[-7:]
+    eng.run_to_completion()
+    assert req.done
+    assert int(np.asarray(eng.cache["pos"])[0]) <= 8
+
+    # reject mode: over-long prompts are shed at submit, not mangled
+    eng2 = ServeEngine(model, params, max_batch=1, max_len=8,
+                       on_long_prompt="reject")
+    req2 = Request(rid=1, prompt=long_prompt, max_new_tokens=4)
+    assert not eng2.submit(req2)
+    assert req2.dropped and not eng2.has_work()
+    assert eng2.requests_rejected == 1
+
+
+def test_lifecycle_dicts_do_not_leak(setup):
+    """Regression: per-request bookkeeping dicts grew unboundedly because
+    completion never popped them."""
+    from repro import obs
+    cfg, model, params = setup
+    rec = obs.Recorder()
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, recorder=rec)
+    reqs = _reqs(cfg, 6, seed=7)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs)
+    assert eng._t_enqueue == {} and eng._t_admit == {} \
+        and eng._t_prefill_done == {}
+
+
+def test_revoke_bookkeeping_consistent_without_recorder(setup):
+    """Regression: revoke_slot's lifecycle pops lived under the
+    rec.enabled guard, so engine state depended on whether observability
+    was attached."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=32)   # NULL rec
+    req = _reqs(cfg, 1, seed=5, max_new=8)[0]
+    eng.submit(req)
+    for _ in range(4):
+        eng.step()
+    eng._t_admit[req.rid] = 0.123       # simulate stale recorder state
+    eng.revoke_slot(0)
+    assert req.rid not in eng._t_admit  # popped regardless of recorder
+    eng.run_to_completion()
+    assert req.done
+
+
+def test_run_to_completion_budget(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=64)
+    req = _reqs(cfg, 1, seed=8, max_new=30)[0]
+    eng.submit(req)
+    with pytest.raises(RuntimeError, match="exhausted max_steps"):
+        eng.run_to_completion(max_steps=3)
+    with pytest.warns(RuntimeWarning, match="exhausted max_steps"):
+        eng.run_to_completion(max_steps=1, on_budget="warn")
+    assert eng.run_to_completion(max_steps=2, on_budget="ignore") == 2
+    eng.run_to_completion()             # finish cleanly within default
+    assert req.done
+
+
+def test_request_timing_populated(setup):
+    cfg, model, params = setup
+    t = {"now": 0.0}
+    eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                      clock=lambda: t["now"])
+    req = _reqs(cfg, 1, seed=9)[0]
+    eng.submit(req)
+    while eng.has_work():
+        eng.step()
+        t["now"] += 0.5                 # virtual half-second per step
+    tm = req.timing
+    assert tm.t_enqueue == 0.0 and tm.t_complete is not None
+    assert tm.t_admit <= tm.t_prefill_done <= tm.t_first_token
+    assert tm.ttft_s is not None and tm.ttft_s > 0
+    assert tm.tpot_s(len(req.generated)) == pytest.approx(0.5)
+    assert tm.latency_s == tm.t_complete
+
+
+def test_cache_batch_axes_derivation():
+    """The batch axis comes from probing the cache layout at two batch
+    sizes — immune to a non-batch dimension colliding with max_batch."""
+    from repro.models.builder import cache_batch_axes
+    cfg = get_config("zamba2-1.2b", reduced=True).replace(dtype="float32")
+    model = build_model(cfg)
+    axes = cache_batch_axes(model, max_len=8)
+    # hybrid "blocks" leaves are (n_blocks, cadence, B, ...): batch is
+    # axis 2, while n_blocks == cadence == 2 collide with max_batch=2 on
+    # axes 0 and 1 — the shape-matching heuristic this replaces zeroed
+    # the cadence axis instead
+    shapes = jax.eval_shape(lambda: model.init_cache(2, 8))
+    assert axes["pos"] == 0
+    blocks_axes = jax.tree.leaves(axes["blocks"])
+    blocks_shapes = jax.tree.leaves(shapes["blocks"])
+    assert blocks_axes, "zamba2 cache has no blocks leaves?"
+    for ax, leaf in zip(blocks_axes, blocks_shapes):
+        assert leaf.shape[:2] == (2, 2)         # the collision is real
+        assert ax == 2
+
+    resnet = build_model(get_config("resnet32-cifar10", reduced=True))
+    with pytest.raises(ValueError, match="no decode cache"):
+        cache_batch_axes(resnet)
+
+
+def test_reset_row_with_colliding_dim():
+    """Slot reuse on a cache whose leading dims equal max_batch: the
+    second occupant of a row must still match an undisturbed solo decode
+    (the misfiring heuristic zeroed a non-batch axis, corrupting the
+    neighbour row's state instead of clearing the right one)."""
+    cfg = get_config("zamba2-1.2b", reduced=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = L.unbox(model.init(jax.random.key(0)))
+    probe = _reqs(cfg, 1, seed=2)[0]
+    solo = ServeEngine(model, params, max_batch=1, max_len=16)
+    solo.submit(probe)
+    solo.run_to_completion()
+
+    eng = ServeEngine(model, params, max_batch=2, max_len=16)
+    filler = _reqs(cfg, 2, seed=3)
+    second = _reqs(cfg, 1, seed=2)[0]           # identical to probe
+    for r in filler:
+        eng.submit(r)
+    eng.submit(second)                          # reuses a dirty row
+    eng.run_to_completion()
+    assert second.generated == probe.generated
