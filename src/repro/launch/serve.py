@@ -121,6 +121,15 @@ def main() -> None:
                          "the legacy one-token-per-step fallback")
     ap.add_argument("--prefill-block", type=int, default=16,
                     help="max prompt tokens ingested per prefill dispatch")
+    ap.add_argument("--cache-impl", choices=("dense", "paged"),
+                    default="dense",
+                    help="KV-cache layout: dense per-slot rows or a paged "
+                         "pool with per-request page tables")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page (paged cache only)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size in pages (paged cache only; default "
+                         "is capacity-equivalent to the dense layout)")
     ap.add_argument("--queue", choices=("fifo", "slo"), default="fifo",
                     help="request queue discipline")
     ap.add_argument("--queue-capacity", type=int, default=None,
@@ -162,6 +171,9 @@ def main() -> None:
                          max_len=args.max_len, recorder=rec, queue=queue,
                          prefill=args.prefill_mode,
                          prefill_block=args.prefill_block,
+                         cache_impl=args.cache_impl,
+                         page_size=args.page_size,
+                         num_pages=args.num_pages,
                          clock=(lambda: clock_state["t"]) if args.trace
                          else None)
 

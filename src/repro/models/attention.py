@@ -174,3 +174,63 @@ def update_cache(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
     k_cache = k_cache.at[rows, pos].set(k_new[:, 0].astype(k_cache.dtype))
     v_cache = v_cache.at[rows, pos].set(v_new[:, 0].astype(v_cache.dtype))
     return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (vLLM-style): KV lives in a shared physical page pool
+# ---------------------------------------------------------------------------
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """pages: (P, ps, ...); page_table: (B, Lp) logical->physical map.
+    Returns the contiguous logical row views (B, Lp*ps, ...): position j
+    of row b lives in physical page ``page_table[b, j // ps]`` at offset
+    ``j % ps``. Out-of-range table entries gather arbitrary (but finite)
+    pages — callers mask by ``pos`` exactly like the dense path, so
+    garbage beyond the written prefix never reaches the softmax."""
+    B, Lp = page_table.shape
+    ps = pages.shape[1]
+    view = pages[page_table]                     # (B, Lp, ps, ...)
+    return view.reshape((B, Lp * ps) + pages.shape[2:])
+
+
+def attend_decode_paged(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        pos: jax.Array, *, window=0,
+                        impl: str = "xla") -> jax.Array:
+    """Page-table-indexed decode attention. q: (B,1,H,Dh); pools:
+    (P, ps, KV, Dh); page_table: (B, Lp); pos: (B,) current index.
+
+    The page table is the ONLY indirection: after the gather the logical
+    row view is exactly the dense cache row (padded to Lp*ps with masked
+    positions that underflow to 0 in the softmax), so parity with
+    :func:`attend_decode` is structural, not numerical luck.
+    """
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return attend_decode(q, k, v, pos, window=window, impl=impl)
+
+
+def update_cache_paged(k_pages: jax.Array, v_pages: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array,
+                       page_table: jax.Array, pos: jax.Array,
+                       write_mask: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter (B,1,KV,Dh) new entries into the page pool at per-row
+    positions (B,). Rows with ``write_mask`` False are redirected to an
+    out-of-bounds physical page and dropped by the scatter — essential
+    in the paged layout, where a stale page-table row may point at pages
+    that now belong to ANOTHER request (the dense layout's idle-row
+    writes were merely wasted; here they would corrupt a neighbour)."""
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    B = page_table.shape[0]
+    Lp = page_table.shape[1]
+    logical = jnp.clip(pos // ps, 0, Lp - 1)
+    phys = page_table[jnp.arange(B), logical]            # (B,)
+    if write_mask is not None:
+        phys = jnp.where(write_mask, phys, P)            # P = OOB -> drop
+    off = pos % ps
+    k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype),
+                                        mode="drop")
+    v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype),
+                                        mode="drop")
+    return k_pages, v_pages

@@ -28,6 +28,8 @@ class Model:
     apply: Callable[..., Tuple[jax.Array, jax.Array]]  # (raw_params, batch)
     init_cache: Optional[Callable[..., PyTree]] = None
     decode: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
+    init_paged_cache: Optional[Callable[..., PyTree]] = None
+    decode_paged: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
     def abstract_params(self) -> PyTree:
         """Boxed tree whose .value leaves are ShapeDtypeStructs."""
@@ -65,6 +67,41 @@ def cache_batch_axes(model: Model, max_len: int = 8,
     return jax.tree.map(axis, c1, c2)
 
 
+def paged_cache_axes(model: Model, max_len: int = 8, *,
+                     page_size: int = 4, num_pages: int = 8,
+                     enc_len: int = 0) -> PyTree:
+    """Per-leaf batch-axis of the PAGED decode cache. Same two-probe
+    derivation as :func:`cache_batch_axes`, except leaves whose shape
+    does NOT scale with batch — the physical page pools, which are
+    shared across rows — map to the sentinel ``-1``
+    (``repro.serving.paging.POOL_AXIS_SENTINEL``). Per-row leaves
+    (page table, pos, recurrent states) still must differ on exactly
+    one axis.
+    """
+    if model.init_paged_cache is None:
+        raise ValueError(f"{model.cfg.name}: family {model.cfg.family!r} "
+                         "has no paged decode cache")
+    b1, b2 = 3, 5
+    c1 = jax.eval_shape(lambda: model.init_paged_cache(
+        b1, max_len, page_size=page_size, num_pages=num_pages,
+        enc_len=enc_len))
+    c2 = jax.eval_shape(lambda: model.init_paged_cache(
+        b2, max_len, page_size=page_size, num_pages=num_pages,
+        enc_len=enc_len))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if not diffs:
+            return -1                      # pool leaf: no batch axis
+        if len(diffs) != 1:
+            raise ValueError(f"cannot derive batch axis: shapes {a.shape} "
+                             f"vs {b.shape} differ on axes {diffs}")
+        return diffs[0]
+
+    return jax.tree.map(axis, c1, c2)
+
+
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.family == "resnet":
         return Model(
@@ -82,4 +119,10 @@ def build_model(cfg: ModelConfig) -> Model:
             cfg, batch, max_len, enc_len=enc_len),
         decode=lambda p, cache, batch: transformer.decode_step(p, cfg, cache,
                                                                batch),
+        init_paged_cache=lambda batch, max_len, *, page_size, num_pages,
+        enc_len=0: transformer.init_paged_decode_cache(
+            cfg, batch, max_len, page_size=page_size, num_pages=num_pages,
+            enc_len=enc_len),
+        decode_paged=lambda p, cache, batch, advance=None:
+        transformer.decode_step_paged(p, cfg, cache, batch, advance=advance),
     )

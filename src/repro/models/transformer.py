@@ -432,6 +432,178 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
     raise ValueError(fam)
 
 
+def init_paged_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                            page_size: int, num_pages: int,
+                            enc_len: int = 0) -> PyTree:
+    """Paged cache pytree for ``decode_step_paged``: every length-bearing
+    KV leaf becomes a physical page pool ``(layers, num_pages, page_size,
+    KV, Dh)`` shared by all rows, indexed through a per-row
+    ``page_table`` leaf ``(batch, ceil(max_len/page_size))``. Recurrent
+    per-row state (SSM/RWKV/Mamba conv+state) carries no length axis and
+    stays dense — paging governs only what grows with tokens."""
+    dt = _dtype(cfg)
+    fam = cfg.family
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    pages_per_row = -(-max_len // page_size)
+
+    def kv_pool(nl):
+        return {
+            "k": jnp.zeros((nl, num_pages, page_size, KV, Dh), dt),
+            "v": jnp.zeros((nl, num_pages, page_size, KV, Dh), dt),
+        }
+
+    table = jnp.zeros((batch, pages_per_row), jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    if fam in ("dense", "vlm"):
+        return {"kv": kv_pool(cfg.num_layers), "page_table": table,
+                "pos": pos}
+    if fam == "moe":
+        c = {"kv": kv_pool(cfg.num_layers - cfg.first_dense_layers),
+             "page_table": table, "pos": pos}
+        if cfg.first_dense_layers:
+            c["kv_dense"] = kv_pool(cfg.first_dense_layers)
+        return c
+    if fam == "hybrid":
+        c = init_decode_cache(cfg, batch, max_len, enc_len=enc_len)
+        n_blocks = cfg.num_layers // cfg.shared_attn_every
+        c["shared_kv"] = kv_pool(n_blocks)
+        c["page_table"] = table
+        return c
+    if fam == "ssm":
+        # attention-free: no KV grows with tokens; the paged cache is the
+        # dense cache plus a page table so the engine's page accounting
+        # (admission budget, shipping) stays uniform across families
+        c = init_decode_cache(cfg, batch, max_len, enc_len=enc_len)
+        c["page_table"] = table
+        return c
+    raise NotImplementedError(
+        f"paged decode cache not supported for family {fam!r} "
+        "(encdec cross-attention caches are fixed-length; use dense)")
+
+
+def _decode_attn_layer_paged(lp, x, cfg, kp, vp, table, pos, window, wmask):
+    h = L.rms_norm(x, lp["ln1"]["gamma"], cfg.norm_eps)
+    q, k, v = A.project_qkv(lp["attn"], h, cfg, positions=pos[:, None])
+    kp, vp = A.update_cache_paged(kp, vp, k, v, table, pos, wmask)
+    att = A.attend_decode_paged(q, kp, vp, table, pos, window=window,
+                                impl=cfg.attn_impl)
+    x = x + A.out_proj(lp["attn"], att)
+    return x, kp, vp
+
+
+def decode_step_paged(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                      batch: Dict[str, jax.Array],
+                      advance: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, PyTree]:
+    """One-token decode against the paged cache. Same contract as
+    :func:`decode_step`, plus ``advance``: a (B,) bool mask of rows that
+    consume this token. Non-advancing rows have their KV writes DROPPED
+    (their page-table rows may reference pages now owned by another
+    request — a write there would corrupt a neighbour, where the dense
+    layout's idle-row writes were merely wasted) and their ``pos``
+    frozen. Recurrent per-row leaves still compute for masked rows; the
+    paged prefill wrapper selects them back, and the engine resets rows
+    at admission, exactly like the dense path."""
+    dt = _dtype(cfg)
+    fam = cfg.family
+    pos = cache["pos"]
+    adv = jnp.ones(pos.shape, bool) if advance is None \
+        else jnp.asarray(advance)
+    if fam == "ssm":
+        # no paged leaves: the dense cell already is the paged cell
+        logits, new_cache = decode_step(params, cfg, cache, batch)
+        new_cache["pos"] = jnp.where(adv, pos + 1, pos)
+        return logits, new_cache
+    table = cache["page_table"]
+    x = L.embed(params["embed"], batch["tokens"], dt)
+    x = shard_act(x, ("batch", None, None))
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm"):
+        windows = _window_schedule(cfg, cfg.num_layers)
+
+        def body(h, xs):
+            lp, kp, vp, win = xs
+            h, kp, vp = _decode_attn_layer_paged(lp, h, cfg, kp, vp,
+                                                 table, pos, win, adv)
+            h = _mlp_block(lp, h, cfg)
+            return h, (kp, vp)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"], windows))
+        new_cache["kv"] = {"k": ks, "v": vs}
+
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            def dbody(h, xs):
+                lp, kp, vp = xs
+                h, kp, vp = _decode_attn_layer_paged(
+                    lp, h, cfg, kp, vp, table, pos, jnp.int32(0), adv)
+                h = _mlp_block(lp, h, cfg)
+                return h, (kp, vp)
+            x, (ks, vs) = jax.lax.scan(
+                dbody, x, (params["dense_layers"],
+                           cache["kv_dense"]["k"], cache["kv_dense"]["v"]))
+            new_cache["kv_dense"] = {"k": ks, "v": vs}
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            h, kp, vp = _decode_attn_layer_paged(
+                lp, h, cfg, kp, vp, table, pos, jnp.int32(0), adv)
+            h2, _ = _moe_block(lp, h, cfg)
+            return h2, (kp, vp)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"]))
+        new_cache["kv"] = {"k": ks, "v": vs}
+
+    elif fam == "hybrid":
+        sp = params["shared"]
+
+        def mamba_body(h, xs):
+            lp, st, cv = xs
+            hn = L.rms_norm(h, lp["ln"]["gamma"], cfg.norm_eps)
+            out, nc = M.decode_mamba2(lp["mamba"], hn,
+                                      {"state": st, "conv": cv}, cfg)
+            return h + out, (nc["state"], nc["conv"])
+
+        def block_body(h, xs):
+            bp, st, cv, kp, vp = xs
+            h, (st, cv) = jax.lax.scan(mamba_body, h, (bp, st, cv))
+            hn = L.rms_norm(h, sp["ln1"]["gamma"], cfg.norm_eps)
+            q, k, v = A.project_qkv(sp["attn"], hn, cfg,
+                                    positions=pos[:, None])
+            kp, vp = A.update_cache_paged(kp, vp, k, v, table, pos, adv)
+            att = A.attend_decode_paged(q, kp, vp, table, pos,
+                                        impl=cfg.attn_impl)
+            h = h + A.out_proj(sp["attn"], att)
+            h = _mlp_block(sp, h, cfg)
+            return h, (st, cv, kp, vp)
+
+        x, (sts, cvs, ks, vs) = jax.lax.scan(
+            block_body, x,
+            (params["blocks"], cache["blocks"]["state"],
+             cache["blocks"]["conv"], cache["shared_kv"]["k"],
+             cache["shared_kv"]["v"]))
+        new_cache["blocks"] = {"state": sts, "conv": cvs}
+        new_cache["shared_kv"] = {"k": ks, "v": vs}
+        if "tail" in cache:
+            x, (sts, cvs) = jax.lax.scan(
+                mamba_body, x,
+                (params["tail"], cache["tail"]["state"],
+                 cache["tail"]["conv"]))
+            new_cache["tail"] = {"state": sts, "conv": cvs}
+    else:
+        raise NotImplementedError(f"paged decode for family {fam!r}")
+
+    x = L.rms_norm(x, params["final_norm"]["gamma"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.tie_embeddings)
+    new_cache["pos"] = jnp.where(adv, pos + 1, pos)
+    return logits, new_cache
+
+
 def encode_for_decode(params, cfg: ModelConfig, frame_embeds: jax.Array,
                       cache: PyTree) -> PyTree:
     """encdec: run the encoder once, fill per-layer cross K/V caches."""

@@ -1,5 +1,7 @@
 from repro.serving.engine import (Request, RequestTiming,  # noqa: F401
                                   ServeEngine, with_impls)
+from repro.serving.paging import (CachePack, PageAllocator,  # noqa: F401
+                                  pages_needed)
 from repro.serving.queue import FIFOQueue, SLOQueue  # noqa: F401
 from repro.serving.cluster import ServeCluster  # noqa: F401
 from repro.serving.autoscale import (ReplicaAutoscaler,  # noqa: F401

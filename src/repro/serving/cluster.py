@@ -64,21 +64,40 @@ class ServeCluster:
         return len(self.replicas)
 
     # -- routing -------------------------------------------------------------
-    def _pick(self) -> ServeEngine:
+    def _pick(self, req: Optional[Request] = None) -> ServeEngine:
         live = [e for e in self.replicas if not e.draining]
         if not live:
             raise RuntimeError("no live replicas: every engine is draining")
-        return min(live, key=lambda e: (e.n_active + len(e.queue)))
+        if req is not None:
+            # page-budget-aware routing: prefer replicas that could admit
+            # this request's worst-case page demand right now, so one
+            # replica's full pool spills load to its siblings instead of
+            # queueing behind it (dense engines always report headroom)
+            fits = [e for e in live if e.admission_headroom(req)]
+            if fits:
+                live = fits
+        return min(live, key=lambda e: (e.n_active + len(e.queue),
+                                        e.page_utilization))
 
     def submit(self, req: Request) -> bool:
-        return self._pick().submit(req)
+        return self._pick(req).submit(req)
 
     def _reroute(self, displaced: List[Request]) -> int:
         """Resubmit displaced work through the normal picker. Returns the
-        number re-admitted (the rest were shed by admission control)."""
+        number re-admitted (the rest were shed by admission control).
+        Requests carrying a cache pack (paged drain) go first to a
+        replica that can land the pack — page-table transfer instead of
+        prefix replay; ``submit`` falls back to replay automatically when
+        no replica can place it."""
         n = 0
         for req in displaced:
-            n += bool(self._pick().submit(req))
+            if req._pack is not None:
+                target = next((e for e in self.replicas
+                               if e.can_import(req)), None)
+                if target is not None:
+                    n += bool(target.submit(req))
+                    continue
+            n += bool(self._pick(req).submit(req))
         return n
 
     # -- revocation ----------------------------------------------------------
@@ -193,3 +212,11 @@ class ServeCluster:
     @property
     def requests_rejected(self) -> int:
         return self._sum("requests_rejected")
+
+    @property
+    def pages_shipped(self) -> int:
+        return self._sum("pages_shipped")
+
+    @property
+    def requests_imported(self) -> int:
+        return self._sum("requests_imported")

@@ -47,8 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.models.builder import Model, build_model, cache_batch_axes
-from repro.train.step import make_prefill_step, make_serve_step
+from repro.models.builder import (Model, build_model, cache_batch_axes,
+                                  paged_cache_axes)
+from repro.serving.paging import (CachePack, PageAllocator, pack_slot,
+                                  pages_needed, unpack_slot)
+from repro.train.step import (make_paged_prefill_step, make_paged_serve_step,
+                              make_prefill_step, make_serve_step)
 
 PyTree = dict
 
@@ -121,6 +125,12 @@ class Request:
     # prefix-replay source after a migration: the exact token stream an
     # undisturbed engine would have consumed up to the migration point
     _replay: Optional[List[int]] = None
+    # cache-shipping pack built at drain on a paged engine: the exact
+    # cache state, importable by a geometry-compatible replica without
+    # replay. ``_pending_replay`` is the replay cost charged only if the
+    # pack cannot be placed and the fallback replay actually runs.
+    _pack: Optional[CachePack] = None
+    _pending_replay: int = 0
 
     @property
     def prefill_tokens(self) -> List[int]:
@@ -139,7 +149,10 @@ class ServeEngine:
                  prefill_block: int = 16,
                  clock: Optional[Callable[[], float]] = None,
                  on_long_prompt: str = "truncate",
-                 shared_fns: Optional[Tuple] = None):
+                 shared_fns: Optional[Tuple] = None,
+                 cache_impl: str = "dense", page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 ship_pages: bool = True):
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # Serving hot path: flip decode attention onto the Pallas kernel
             # (or back to xla) without asking callers to rebuild the model.
@@ -150,6 +163,9 @@ class ServeEngine:
         if on_long_prompt not in ("truncate", "reject"):
             raise ValueError(f"on_long_prompt must be 'truncate' or "
                              f"'reject', got {on_long_prompt!r}")
+        if cache_impl not in ("dense", "paged"):
+            raise ValueError(f"cache_impl must be 'dense' or 'paged', "
+                             f"got {cache_impl!r}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -157,14 +173,55 @@ class ServeEngine:
         self.prefill_mode = prefill
         self.prefill_block = max(1, min(prefill_block, max_len))
         self.on_long_prompt = on_long_prompt
-        self.cache = model.init_cache(max_batch, max_len)
-        # batch axis per cache leaf, from the cache layout itself — row
-        # resets and the prefill row-select must never guess shapes
-        self._batch_axes = cache_batch_axes(model, max_len)
+        self.cache_impl = cache_impl
+        self._paged = cache_impl == "paged"
+        self.ship_pages = ship_pages and self._paged
+        if self._paged:
+            if model.init_paged_cache is None:
+                raise ValueError(f"{model.cfg.name}: family "
+                                 f"{model.cfg.family!r} has no paged cache")
+            self.page_size = max(1, min(page_size, max_len))
+            self.pages_per_row = -(-max_len // self.page_size)
+            if num_pages is None:
+                # capacity-equivalent default: every slot can still reach
+                # max_len; memory wins come from setting num_pages lower
+                num_pages = max_batch * self.pages_per_row
+            self.num_pages = num_pages
+            self.allocator: Optional[PageAllocator] = PageAllocator(
+                num_pages, self.page_size)
+            self.cache = model.init_paged_cache(
+                max_batch, max_len, page_size=self.page_size,
+                num_pages=num_pages)
+            # batch axis per per-row leaf; pool leaves carry the -1
+            # sentinel (no batch axis — shared physical pages)
+            self._batch_axes = paged_cache_axes(
+                model, max_len, page_size=self.page_size,
+                num_pages=num_pages)
+        else:
+            self.page_size = 0
+            self.pages_per_row = 0
+            self.num_pages = 0
+            self.allocator = None
+            self.cache = model.init_cache(max_batch, max_len)
+            # batch axis per cache leaf, from the cache layout itself — row
+            # resets and the prefill row-select must never guess shapes
+            self._batch_axes = cache_batch_axes(model, max_len)
+        # compiled-fn / cache-pack compatibility tag: replicas may only
+        # share jitted steps (and accept shipped cache packs) when model,
+        # layout and geometry all agree
+        self._cache_key = (model.cfg.name, model.cfg.attn_impl, cache_impl,
+                           self.page_size, max_len)
         if shared_fns is not None:
             # replicas of one model share compiled steps (a new jit per
             # replica would recompile identical programs per engine)
-            self.step_fn, self.prefill_fn = shared_fns
+            key, self.step_fn, self.prefill_fn = shared_fns
+            if key != self._cache_key:
+                raise ValueError(f"shared_fns were compiled for {key}, "
+                                 f"engine needs {self._cache_key}")
+        elif self._paged:
+            self.step_fn = jax.jit(make_paged_serve_step(model))
+            self.prefill_fn = jax.jit(
+                make_paged_prefill_step(model, self._batch_axes))
         else:
             self.step_fn = jax.jit(make_serve_step(model))
             self.prefill_fn = jax.jit(
@@ -179,6 +236,8 @@ class ServeEngine:
         self.tokens_lost = 0          # decode work discarded by hard revokes
         self.tokens_replayed = 0      # prefill work added by migrations
         self.requests_rejected = 0    # shed at submit (admission/validation)
+        self.pages_shipped = 0        # pages imported via cache-shipping
+        self.requests_imported = 0    # migrations landed without replay
         self.draining = False
         self.rec = recorder if recorder is not None else obs.NULL
         self._epoch = time.monotonic()
@@ -195,13 +254,53 @@ class ServeEngine:
 
     @property
     def shared_fns(self) -> Tuple:
-        """Compiled (decode, prefill) pair; pass to sibling replicas."""
-        return (self.step_fn, self.prefill_fn)
+        """Compiled ``(cache_key, decode, prefill)`` triple; pass to
+        sibling replicas. The key guards against sharing steps across
+        incompatible geometries (dense vs paged, different page size)."""
+        return (self._cache_key, self.step_fn, self.prefill_fn)
 
     @property
     def _pending(self):
         """Queue view (kept for tests/introspection; index 0 = next pop)."""
         return self.queue
+
+    # -- page accounting -----------------------------------------------------
+    def _pages_for(self, req: Request) -> int:
+        """Worst-case page demand, reserved in full at admission: the
+        request may touch ``prefill + remaining-decode`` cache positions,
+        capped by ``max_len`` (the retire guard stops it there). Reserving
+        up front means an admitted request can never stall mid-decode on
+        allocation — admission control is the only place pages can be
+        denied, so the page budget is enforceable by the queue."""
+        tokens = min(len(req.prefill_tokens) + req.remaining_tokens,
+                     self.max_len)
+        return pages_needed(tokens, self.page_size)
+
+    def _set_page_table_row(self, row: int, pages: List[int]) -> None:
+        padded = np.zeros((self.pages_per_row,), np.int32)
+        padded[:len(pages)] = pages
+        self.cache["page_table"] = \
+            self.cache["page_table"].at[row].set(jnp.asarray(padded))
+
+    def _free_pages(self, req: Request) -> None:
+        if self._paged:
+            self.allocator.free(req.rid)
+
+    @property
+    def page_utilization(self) -> float:
+        """Fraction of the physical page pool currently allocated (0.0
+        for dense engines — they have no schedulable cache resource)."""
+        if not self._paged:
+            return 0.0
+        return self.allocator.used_pages / self.num_pages
+
+    def admission_headroom(self, req: Request) -> bool:
+        """Whether this engine could admit ``req`` right now without
+        waiting for pages to free up. Dense engines always say yes —
+        their admission wall is slots, handled by queue capacity."""
+        if not self._paged:
+            return True
+        return self.allocator.can_alloc(self._pages_for(req))
 
     # -- request management --------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -217,6 +316,23 @@ class ServeEngine:
             req.prompt = list(req.prompt[-limit:])
         if self.draining:
             return self._drop(req, "draining")
+        if self._paged and self._pages_for(req) > self.num_pages:
+            # can NEVER fit this pool; queueing it would deadlock _admit
+            return self._drop(req, "pages")
+        if req._pack is not None:
+            # migration by cache shipping: land the pack directly in a
+            # slot (pages + state transfer, no replay). Queue-jumping is
+            # the same fairness call as requeue_front after a revoke —
+            # the request already waited its turn once.
+            if self._try_import(req):
+                return True
+            # target cannot place the pack: charge the replay fallback
+            # that will now actually run
+            req._pack = None
+            cost = req._pending_replay
+            req._pending_replay = 0
+            req.timing.tokens_replayed += cost
+            self.tokens_replayed += cost
         if not self.queue.push(req, now=now):
             return self._drop(req, "admission")
         if req.timing.t_enqueue is None:
@@ -247,6 +363,12 @@ class ServeEngine:
         matching — a heads/layers dim that collides with ``max_batch``
         cannot divert the reset onto the wrong axis."""
         def zero_row(ax, leaf):
+            if ax == -1:
+                # pool leaf: pages are shared, not row-owned. No zeroing
+                # needed either — every position is written before it is
+                # read (attention masks kj <= pos), so recycled pages
+                # cannot leak a predecessor's KV into a softmax.
+                return leaf
             idx = (slice(None),) * ax + (row,)
             return leaf.at[idx].set(0)
         self.cache = jax.tree.map(zero_row, self._batch_axes, self.cache)
@@ -262,14 +384,77 @@ class ServeEngine:
             req = self.queue.pop(now=now)
             if req is None:               # backlog was all expired work
                 break
+            pages: Optional[List[int]] = None
+            if self._paged:
+                pages = self.allocator.alloc(req.rid, self._pages_for(req))
+                if pages is None:
+                    # page-budget admission: the slot is free but the
+                    # pool cannot cover this request's worst case. Hold
+                    # the HEAD of the queue (no reorder — a smaller
+                    # request must not starve it) until retirements free
+                    # pages.
+                    self.queue.requeue_front(req)
+                    break
             self.slots[i] = req
             self._prefill_cursor[i] = 0
             self._reset_row(i)
+            if pages is not None:
+                self._set_page_table_row(i, pages)
             req.timing.t_admit = now
             if rec.enabled:
                 self._t_admit[req.rid] = rec.now()
                 rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
                             track=f"slot{i}", rid=req.rid)
+
+    # -- cache shipping (paged migration without replay) ---------------------
+    def can_import(self, req: Request) -> bool:
+        """Whether ``req``'s cache pack could land here right now: same
+        model + cache geometry, a free slot, and enough free pages."""
+        pack = req._pack
+        return (pack is not None and self._paged and not self.draining
+                and pack.cache_key == self._cache_key
+                and any(s is None for s in self.slots)
+                and self.allocator.can_alloc(
+                    max(self._pages_for(req), pack.n_pages)))
+
+    def _try_import(self, req: Request) -> bool:
+        """Land a shipped cache pack in a free slot: allocate pages,
+        scatter the pack's pool pages + row state, install the page
+        table. The request resumes decoding exactly where it left off —
+        zero replay tokens."""
+        if not self.can_import(req):
+            return False
+        pack = req._pack
+        row = next(i for i, s in enumerate(self.slots) if s is None)
+        # same worst-case formula as the source's admission, so this
+        # normally equals pack.n_pages exactly; max() keeps a defensive
+        # floor under the pack's physical payload
+        need = max(self._pages_for(req), pack.n_pages)
+        pages = self.allocator.alloc(req.rid, need)
+        if pages is None:                 # raced can_import; shouldn't happen
+            return False
+        self.cache = unpack_slot(self.cache, self._batch_axes, row,
+                                 pages[:pack.n_pages], pack)
+        # the pack carried the SOURCE page-table row; overwrite with ours
+        self._set_page_table_row(row, pages)
+        self.slots[row] = req
+        self._prefill_cursor[row] = len(req.prefill_tokens)
+        req._pack = None
+        req._pending_replay = 0
+        now = self.clock()
+        req.timing.t_admit = now
+        req.timing.t_prefill_done = now   # state arrived pre-filled
+        self.pages_shipped += pack.n_pages
+        self.requests_imported += 1
+        rec = self.rec
+        if rec.enabled:
+            self._t_admit[req.rid] = rec.now()
+            self._t_prefill_done[req.rid] = rec.now()
+            rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
+                        track=f"slot{row}", rid=req.rid, mode="ship",
+                        pages=pack.n_pages)
+            rec.metrics.counter("pages_shipped").inc(pack.n_pages)
+        return True
 
     # -- revocation: drain (warned) and hard revoke (fired) ------------------
     def begin_drain(self, *, grace_tokens: int = 4) -> List[Request]:
@@ -303,17 +488,33 @@ class ServeEngine:
         """Evict with prefix replay: the replay stream is exactly the
         token sequence an undisturbed engine consumed — prompt, the
         re-fed final prompt token, then all but the last generated token
-        (the last one becomes the resume decode input)."""
+        (the last one becomes the resume decode input).
+
+        On a paged engine with ``ship_pages``, the request additionally
+        carries a :class:`CachePack` — its exact pool pages and row
+        state — so a geometry-compatible target can land it WITHOUT
+        replay; the replay stream stays attached as the fallback and its
+        cost is charged only if the fallback actually runs (dense
+        engines charge eagerly, as before)."""
+        shipped = False
         if req.generated:
             req._replay = (list(req.prompt) + [req.prompt[-1]]
                            + list(req.generated[:-1]))
             replay_cost = len(req._replay)
+            if self.ship_pages:
+                req._pack = pack_slot(self.cache, self._batch_axes, slot,
+                                      self.allocator.pages_of(req.rid),
+                                      self._cache_key)
+                req._pending_replay = replay_cost
+                shipped = True
         else:
             req._replay = None            # still in prefill: plain restart
             replay_cost = 0
         req.timing.n_migrations += 1
-        req.timing.tokens_replayed += replay_cost
-        self.tokens_replayed += replay_cost
+        if not shipped:
+            req.timing.tokens_replayed += replay_cost
+            self.tokens_replayed += replay_cost
+        self._free_pages(req)
         self.slots[slot] = None
         self._prefill_cursor.pop(slot, None)
         # lifecycle restarts at admission on the target replica
@@ -322,7 +523,8 @@ class ServeEngine:
         rec = self.rec
         if rec.enabled:
             rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", slot=slot, mode="replay",
+                        track=f"req{req.rid}", slot=slot,
+                        mode="ship" if shipped else "replay",
                         kept_tokens=len(req.generated),
                         replay_tokens=replay_cost)
             rec.metrics.counter("requests_migrated").inc()
@@ -362,6 +564,8 @@ class ServeEngine:
         req = self.slots[slot]
         self.slots[slot] = None
         self._prefill_cursor.pop(slot, None)
+        if req is not None:
+            self._free_pages(req)
         rec = self.rec
         if rec.enabled:
             rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_SERVE,
@@ -385,6 +589,8 @@ class ServeEngine:
             self.tokens_lost += lost
             req.generated = []
             req._replay = None
+            req._pack = None              # any shipped state is now stale
+            req._pending_replay = 0
             if _requeue:
                 self.queue.requeue_front(req)
         return req
@@ -466,6 +672,21 @@ class ServeEngine:
             if self._prefill_cursor[i] >= len(req.prefill_tokens):
                 self._finish_prefill(i, req)
 
+    def _dispatch_decode(self, tokens: np.ndarray) -> np.ndarray:
+        """Run the compiled decode cell. The paged cell takes the active
+        row mask — empty slots' page-table rows may point at pages now
+        owned by live requests, so their writes must be DROPPED inside
+        the kernel (dense empty-row writes are merely wasted work)."""
+        if self._paged:
+            active = np.asarray([s is not None for s in self.slots])
+            nxt, self.cache = self.step_fn(self.params, self.cache,
+                                           jnp.asarray(tokens),
+                                           jnp.asarray(active))
+        else:
+            nxt, self.cache = self.step_fn(self.params, self.cache,
+                                           jnp.asarray(tokens))
+        return np.asarray(nxt)
+
     def _step_token(self) -> None:
         """Legacy combined step: prefill rows feed one prompt token,
         decode rows feed their last output; one dispatch for both."""
@@ -487,9 +708,7 @@ class ServeEngine:
                     continue
             tokens[i, 0] = (req.generated[-1] if req.generated
                             else req.prompt[-1])
-        nxt, self.cache = self.step_fn(self.params, self.cache,
-                                       jnp.asarray(tokens))
-        nxt = np.asarray(nxt)
+        nxt = self._dispatch_decode(tokens)
 
         rec = self.rec
         n_dec = 0
@@ -515,9 +734,7 @@ class ServeEngine:
                 continue
             tokens[i, 0] = (req.generated[-1] if req.generated
                             else req.prompt[-1])
-        nxt, self.cache = self.step_fn(self.params, self.cache,
-                                       jnp.asarray(tokens))
-        nxt = np.asarray(nxt)
+        nxt = self._dispatch_decode(tokens)
         n_dec = 0
         for i, req in enumerate(self.slots):
             if req is None:
@@ -543,6 +760,7 @@ class ServeEngine:
         req.timing.t_complete = self.clock()
         self.slots[i] = None
         self._prefill_cursor.pop(i, None)
+        self._free_pages(req)
         rec = self.rec
         if rec.enabled:
             now = rec.now()

@@ -1,0 +1,184 @@
+"""Paged KV-cache: page allocator + pack/unpack for cache-shipping.
+
+The dense engine stores each cache leaf as one ``[..., max_batch,
+max_len, ...]`` block, so every admitted request owns ``max_len`` cache
+positions whether it uses them or not: long-tail prompts strand memory
+and ``max_len`` is a hard admission wall. The paged layout (vLLM-style)
+breaks the ``(batch, length)`` plane into fixed-size **pages** shared
+through one physical pool:
+
+- every length-bearing cache leaf becomes ``[layers, num_pages,
+  page_size, ...]`` — a pool of physical pages with no batch axis;
+- each request owns a **page table** (logical page -> physical page),
+  stored as a ``(max_batch, pages_per_row)`` leaf in the cache pytree
+  so the compiled decode step can gather row views;
+- the :class:`PageAllocator` hands out physical pages O(1) from a free
+  list with exact accounting, making per-replica cache capacity a
+  *schedulable resource*: admission holds a request in the queue until
+  its worst-case page demand fits, instead of admitting on free slots
+  and overflowing later.
+
+Recurrent-state leaves (SSM/RWKV/Mamba) carry no length axis — their
+per-row state is O(1) in tokens — so they stay dense per-row and the
+page budget for those families is a *logical* token budget (the same
+admission arithmetic, no physical pool behind it).
+
+Pages also make migration cheap: a drained request's cache rows are a
+handful of pages, so ``pack_slot``/``unpack_slot`` ship the exact
+physical bytes to the replacement replica (page-table transfer) instead
+of replaying ``prompt + generated`` through prefill. Replay survives as
+the fallback whenever the target cannot place the pack.
+
+Invariant relied on throughout: pool leaves put layers on axis 0 and
+the physical page index on axis 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+POOL_AXIS_SENTINEL = -1     # marks pool leaves in per-row axes trees
+PAGE_AXIS = 1               # physical page index axis of pool leaves
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages covering ``n_tokens`` cache positions (ceil division)."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Fixed-size page pool with a free list and per-request page tables.
+
+    O(1) per-page alloc/free (list push/pop), all-or-nothing allocation
+    (a request never holds a partial grant), and exact conservation:
+    ``free_pages + used_pages == num_pages`` always. ``peak_used`` is
+    the high-water mark the memory benchmarks report.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: recently-freed pages are re-used first (warm)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self.peak_used = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    def pages_of(self, rid: int) -> List[int]:
+        """This request's physical pages in logical order (copy)."""
+        return list(self._tables.get(rid, ()))
+
+    def holds(self, rid: int) -> bool:
+        return rid in self._tables
+
+    def alloc(self, rid: int, n_pages: int) -> Optional[List[int]]:
+        """Grant ``n_pages`` more pages to ``rid`` (appended to its page
+        table, so a growing request calls this incrementally). Returns
+        the newly granted physical pages, or None if the free list
+        cannot cover the demand — in which case NOTHING is allocated
+        (all-or-nothing, so a failed admission leaves no residue)."""
+        if n_pages < 0:
+            raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+        if n_pages > len(self._free):
+            return None
+        grant = [self._free.pop() for _ in range(n_pages)]
+        self._tables.setdefault(rid, []).extend(grant)
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return grant
+
+    def free(self, rid: int) -> int:
+        """Return ALL of ``rid``'s pages to the free list. Returns how
+        many were freed (0 if the request held none — retire, migrate
+        and revoke paths may race benignly on this)."""
+        pages = self._tables.pop(rid, None)
+        if not pages:
+            return 0
+        self._free.extend(pages)
+        return len(pages)
+
+    def adopt(self, rid: int, pages: List[int]) -> None:
+        """Install an externally-built page table (cache-shipping import
+        path): the pages MUST have been granted by this allocator via
+        ``alloc`` — this only re-keys them under ``rid``."""
+        if rid in self._tables:
+            raise ValueError(f"rid {rid} already holds pages")
+        self._tables[rid] = list(pages)
+
+
+# ---------------------------------------------------------------------------
+# Cache-shipping packs: exact cache state of one slot, relocatable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CachePack:
+    """The migratable cache state of one in-flight request: its pool
+    pages (gathered in logical order) and its per-row leaf slices, as
+    one numpy tree matching the cache structure. A pack reproduces the
+    undisturbed decode state bitwise on any replica with the same
+    model + page geometry, skipping prefix replay."""
+    cache_key: tuple                 # (model name, page_size) compat tag
+    n_pages: int
+    tree: PyTree                     # pool leaves: (layers, n_pages, ps, ...)
+    pos: int                         # per-row leaves: batch axis sliced out
+
+
+def _row_index(ax: int, row) -> tuple:
+    return (slice(None),) * ax + (row,)
+
+
+def pack_slot(cache: PyTree, row_axes: PyTree, row: int,
+              pages: List[int], cache_key: tuple) -> CachePack:
+    """Extract slot ``row``'s cache state: gather its physical pages
+    from every pool leaf and slice its row from every per-row leaf.
+    ``row_axes`` maps each leaf to its batch axis, with
+    ``POOL_AXIS_SENTINEL`` marking pool leaves."""
+    idx = np.asarray(pages, np.int64)
+
+    def take(ax, leaf):
+        a = np.asarray(leaf)
+        if ax == POOL_AXIS_SENTINEL:
+            return np.take(a, idx, axis=PAGE_AXIS)
+        return np.copy(a[_row_index(ax, row)])
+
+    tree = jax.tree.map(take, row_axes, cache)
+    return CachePack(cache_key=cache_key, n_pages=len(pages), tree=tree,
+                     pos=int(np.asarray(cache["pos"])[row]))
+
+
+def unpack_slot(cache: PyTree, row_axes: PyTree, row: int,
+                pages: List[int], pack: CachePack) -> PyTree:
+    """Scatter a pack into slot ``row``: pool leaves land on the freshly
+    granted ``pages`` (any physical placement — the page table restores
+    logical order), per-row leaves overwrite the row. Returns the new
+    cache pytree; the caller still owns the page-table leaf update."""
+    if len(pages) != pack.n_pages:
+        raise ValueError(f"pack has {pack.n_pages} pages, got {len(pages)}")
+    idx = np.asarray(pages, np.int64)
+
+    def put(ax, leaf, src):
+        if ax == POOL_AXIS_SENTINEL:
+            return leaf.at[:, idx].set(src.astype(leaf.dtype))
+        return leaf.at[_row_index(ax, row)].set(src.astype(leaf.dtype))
+
+    return jax.tree.map(put, row_axes, cache, pack.tree)

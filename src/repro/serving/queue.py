@@ -63,12 +63,28 @@ class FIFOQueue:
         return self._items[i]
 
 
+def _deadline_of(req: Request) -> float:
+    """Effective deadline for ordering AND expiry: ``None`` means the
+    request never expires (the ordering key already said so via
+    ``math.inf``; the expiry comparisons must agree, or a deadline-free
+    request crashes ``push``/``pop`` with a ``TypeError``)."""
+    d = req.deadline_s
+    return math.inf if d is None else d
+
+
 class SLOQueue:
     """Deadline/priority-ordered queue with admission control.
 
     ``on_drop`` (optional callable) observes every request rejected at
     admission or expired at pop, so the engine can count SLO losses that
     never reached a slot.
+
+    ``budget`` (optional) bounds the backlog by an arbitrary additive
+    resource instead of request count: ``cost(req)`` (default 1 per
+    request) is charged at push and released at pop/drain. With
+    ``cost = pages_needed(...)`` this is page-budget admission control —
+    the queue sheds load when the backlog's worst-case KV-cache demand
+    exceeds the replica's page pool, not merely when slots run out.
     """
 
     # re-admitted requests sort ahead of fresh ones at the same
@@ -77,41 +93,61 @@ class SLOQueue:
 
     def __init__(self, *, capacity: Optional[int] = None,
                  drop_expired: bool = True,
-                 on_drop: Optional[Callable[[Request, str], None]] = None):
+                 on_drop: Optional[Callable[[Request, str], None]] = None,
+                 budget: Optional[float] = None,
+                 cost: Optional[Callable[[Request], float]] = None):
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if budget is not None and budget <= 0:
+            raise ValueError(f"budget must be > 0, got {budget}")
         self.capacity = capacity
         self.drop_expired = drop_expired
         self.on_drop = on_drop
+        self.budget = budget
+        self._cost = cost if cost is not None else (lambda req: 1)
+        self._used = 0.0
         self._heap: List = []
         self._seq = itertools.count()
 
+    @property
+    def used_budget(self) -> float:
+        return self._used
+
     def _key(self, req: Request, seq: int):
-        deadline = req.deadline_s if req.deadline_s is not None else math.inf
-        return (req.priority, deadline, seq)
+        return (req.priority, _deadline_of(req), seq)
 
     def push(self, req: Request, *, now: float = 0.0) -> bool:
         if self.capacity is not None and len(self._heap) >= self.capacity:
             if self.on_drop:
                 self.on_drop(req, "capacity")
             return False
-        if self.drop_expired and now > req.deadline_s:
+        if self.drop_expired and now > _deadline_of(req):
             if self.on_drop:
                 self.on_drop(req, "expired")
             return False
-        heapq.heappush(self._heap, (*self._key(req, next(self._seq)), req))
+        c = self._cost(req)
+        if self.budget is not None and self._used + c > self.budget:
+            if self.on_drop:
+                self.on_drop(req, "budget")
+            return False
+        heapq.heappush(self._heap,
+                       (*self._key(req, next(self._seq)), c, req))
+        self._used += c
         return True
 
     def requeue_front(self, req: Request) -> None:
         """Re-admit a revoked/migrated request ahead of same-key arrivals
-        (never subject to capacity: it was already admitted once)."""
+        (never subject to capacity/budget: it was already admitted once)."""
+        c = self._cost(req)
         heapq.heappush(self._heap,
-                       (*self._key(req, next(SLOQueue._front)), req))
+                       (*self._key(req, next(SLOQueue._front)), c, req))
+        self._used += c
 
     def pop(self, *, now: float = 0.0) -> Optional[Request]:
         while self._heap:
-            *_, req = heapq.heappop(self._heap)
-            if self.drop_expired and now > req.deadline_s:
+            *_, c, req = heapq.heappop(self._heap)
+            self._used -= c
+            if self.drop_expired and now > _deadline_of(req):
                 if self.on_drop:
                     self.on_drop(req, "expired")
                 continue
@@ -121,6 +157,7 @@ class SLOQueue:
     def drain_all(self) -> List[Request]:
         out = [entry[-1] for entry in sorted(self._heap)]
         self._heap.clear()
+        self._used = 0.0
         return out
 
     def __len__(self) -> int:

@@ -250,3 +250,68 @@ def make_prefill_step(model: Model, batch_axes: PyTree
         return cache
 
     return prefill_step
+
+
+def make_paged_serve_step(model: Model, *, sample: str = "greedy"
+                          ) -> Callable[..., Tuple[jax.Array, PyTree]]:
+    """One-token decode against the paged cache:
+    ``(params, cache, tokens (B,1), active (B,)) -> (next, cache)``.
+
+    Unlike the dense step, the active-row mask is part of the compiled
+    cell: inactive rows' page-table entries may point at pages owned by
+    another request, so their KV writes must be dropped inside the
+    kernel, not merely ignored by the engine afterwards.
+    """
+
+    def serve_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                   active: jax.Array) -> Tuple[jax.Array, PyTree]:
+        logits, cache = model.decode_paged(params, cache,
+                                           {"tokens": tokens},
+                                           advance=active)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], cache
+
+    return serve_step
+
+
+def make_paged_prefill_step(model: Model, row_axes: PyTree
+                            ) -> Callable[..., PyTree]:
+    """Blocked prefill over the paged decode cell. Same contract as
+    :func:`make_prefill_step` — ``(params, cache, tokens (B, T),
+    n_valid (B,)) -> cache`` — but row freezing is split by leaf kind:
+    pool leaves (marked ``-1`` in ``row_axes``, from
+    :func:`repro.models.builder.paged_cache_axes`) are protected by the
+    decode cell's own write-drop on the advance mask, while per-row
+    leaves (page table, pos, recurrent state) get the same batch-axis
+    select as the dense path.
+    """
+
+    def select_rows(ax: int, mask: jax.Array, new: jax.Array,
+                    old: jax.Array) -> jax.Array:
+        m = mask.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+        return jnp.where(m, new, old)
+
+    def prefill_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                     n_valid: jax.Array) -> PyTree:
+        T = tokens.shape[1]
+
+        def body(cache, xs):
+            tok, t = xs
+            adv = t < n_valid
+            _, new_cache = model.decode_paged(params, cache,
+                                              {"tokens": tok[:, None]},
+                                              advance=adv)
+            cache = jax.tree.map(
+                lambda ax, new, old:
+                new if ax == -1 else select_rows(ax, adv, new, old),
+                row_axes, new_cache, cache)
+            return cache, None
+
+        cache, _ = jax.lax.scan(body, cache,
+                                (tokens.T, jnp.arange(T, dtype=jnp.int32)))
+        return cache
+
+    return prefill_step

@@ -1,0 +1,199 @@
+"""Deterministic paging tests: allocator spot checks (run even without
+hypothesis — the property suite deepens these), the attention-level
+paged primitives, and the pack/unpack cache-shipping round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.serving.paging import (POOL_AXIS_SENTINEL, CachePack,
+                                  PageAllocator, pack_slot, pages_needed,
+                                  unpack_slot)
+
+
+# -- allocator ---------------------------------------------------------------
+
+def test_alloc_free_roundtrip_and_accounting():
+    a = PageAllocator(8, page_size=4)
+    g0 = a.alloc(0, 3)
+    g1 = a.alloc(1, 5)
+    assert len(g0) == 3 and len(g1) == 5
+    assert set(g0).isdisjoint(g1)
+    assert a.free_pages == 0 and a.used_pages == 8
+    assert a.alloc(2, 1) is None          # exhausted
+    assert a.free(0) == 3
+    assert a.free_pages == 3
+    g2 = a.alloc(2, 2)
+    assert set(g2) <= set(g0)             # recycled pages
+    assert a.peak_used == 8
+
+
+def test_alloc_is_all_or_nothing():
+    a = PageAllocator(4, page_size=4)
+    a.alloc(0, 3)
+    before = a.free_pages
+    assert a.alloc(1, 2) is None          # only 1 free
+    assert a.free_pages == before         # nothing leaked
+    assert not a.holds(1)
+
+
+def test_incremental_alloc_appends_in_logical_order():
+    a = PageAllocator(8, page_size=4)
+    g0 = a.alloc(0, 2)
+    g1 = a.alloc(0, 2)
+    assert a.pages_of(0) == g0 + g1
+
+
+def test_adopt_rekeys_and_rejects_duplicates():
+    a = PageAllocator(4, page_size=4)
+    g = a.alloc(99, 2)
+    a._tables.pop(99)                     # simulate an import handoff
+    a.adopt(7, g)
+    assert a.pages_of(7) == g
+    with pytest.raises(ValueError, match="already holds"):
+        a.adopt(7, g)
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="num_pages"):
+        PageAllocator(0, page_size=4)
+    with pytest.raises(ValueError, match="page_size"):
+        PageAllocator(4, page_size=0)
+    a = PageAllocator(4, page_size=4)
+    with pytest.raises(ValueError, match="n_pages"):
+        a.alloc(0, -1)
+
+
+def test_pages_needed_spot_checks():
+    assert pages_needed(0, 4) == 0
+    assert pages_needed(1, 4) == 1
+    assert pages_needed(4, 4) == 1
+    assert pages_needed(5, 4) == 2
+
+
+# -- attention-level paged primitives ----------------------------------------
+
+def test_gather_pages_reassembles_logical_rows():
+    P, ps, KV, Dh = 6, 2, 1, 3
+    pages = jnp.arange(P * ps * KV * Dh, dtype=jnp.float32) \
+        .reshape(P, ps, KV, Dh)
+    table = jnp.asarray([[4, 1, 0], [2, 5, 3]], jnp.int32)
+    view = A.gather_pages(pages, table)
+    assert view.shape == (2, 6, KV, Dh)
+    np.testing.assert_array_equal(np.asarray(view[0, 0:2]),
+                                  np.asarray(pages[4]))
+    np.testing.assert_array_equal(np.asarray(view[0, 2:4]),
+                                  np.asarray(pages[1]))
+    np.testing.assert_array_equal(np.asarray(view[1, 4:6]),
+                                  np.asarray(pages[3]))
+
+
+def test_update_cache_paged_writes_through_table_and_drops_masked():
+    P, ps, KV, Dh = 4, 2, 1, 2
+    kp = jnp.zeros((P, ps, KV, Dh))
+    vp = jnp.zeros((P, ps, KV, Dh))
+    table = jnp.asarray([[3, 1], [0, 2]], jnp.int32)
+    pos = jnp.asarray([2, 1])             # row0 -> page 1 off 0; row1 -> page 0 off 1
+    k_new = jnp.ones((2, 1, KV, Dh))
+    v_new = 2 * jnp.ones((2, 1, KV, Dh))
+
+    k2, v2 = A.update_cache_paged(kp, vp, k_new, v_new, table, pos)
+    assert float(k2[1, 0].sum()) == Dh    # row0 wrote page 1, offset 0
+    assert float(k2[0, 1].sum()) == Dh    # row1 wrote page 0, offset 1
+    assert float(v2[1, 0].sum()) == 2 * Dh
+
+    # masked row's write is DROPPED (stale tables must not corrupt pages)
+    mask = jnp.asarray([False, True])
+    k3, _ = A.update_cache_paged(kp, vp, k_new, v_new, table, pos, mask)
+    assert float(k3[1].sum()) == 0.0      # row0 dropped
+    assert float(k3[0, 1].sum()) == Dh    # row1 still landed
+
+
+def test_paged_decode_attention_matches_dense():
+    rng = np.random.default_rng(0)
+    B, H, KV, Dh, L, ps = 2, 4, 2, 8, 12, 4
+    P = B * (L // ps) + 1
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), jnp.float32)
+    dense_k = jnp.asarray(rng.normal(size=(B, L, KV, Dh)), jnp.float32)
+    dense_v = jnp.asarray(rng.normal(size=(B, L, KV, Dh)), jnp.float32)
+    pos = jnp.asarray([7, 10])
+
+    # scatter the dense rows into a scrambled pool
+    perm = rng.permutation(P)[: B * (L // ps)].reshape(B, -1)
+    kp = np.zeros((P, ps, KV, Dh), np.float32)
+    vp = np.zeros((P, ps, KV, Dh), np.float32)
+    for b in range(B):
+        for lp_ in range(L // ps):
+            kp[perm[b, lp_]] = np.asarray(dense_k[b, lp_ * ps:(lp_ + 1) * ps])
+            vp[perm[b, lp_]] = np.asarray(dense_v[b, lp_ * ps:(lp_ + 1) * ps])
+    table = jnp.asarray(perm, jnp.int32)
+
+    want = A.attend_decode(q, dense_k, dense_v, pos)
+    got = A.attend_decode_paged(q, jnp.asarray(kp), jnp.asarray(vp),
+                                table, pos)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# -- pack/unpack cache shipping ----------------------------------------------
+
+def _toy_cache(B, P, ps, L):
+    return {
+        "kv": {"k": jnp.arange(2 * P * ps * 3, dtype=jnp.float32)
+               .reshape(2, P, ps, 3),
+               "v": -jnp.arange(2 * P * ps * 3, dtype=jnp.float32)
+               .reshape(2, P, ps, 3)},
+        "page_table": jnp.zeros((B, L // ps), jnp.int32),
+        "pos": jnp.asarray([5] * B, jnp.int32),
+        "state": jnp.arange(B * 4, dtype=jnp.float32).reshape(B, 4),
+    }
+
+
+_TOY_AXES = {"kv": {"k": POOL_AXIS_SENTINEL, "v": POOL_AXIS_SENTINEL},
+             "page_table": 0, "pos": 0, "state": 0}
+
+
+def test_pack_unpack_roundtrip_relocates_pages():
+    B, P, ps, L = 2, 6, 2, 8
+    cache = _toy_cache(B, P, ps, L)
+    src_pages = [4, 1]
+    cache["page_table"] = cache["page_table"].at[1].set(
+        jnp.asarray(src_pages + [0, 0], jnp.int32))
+    pack = pack_slot(cache, _TOY_AXES, 1, src_pages, ("toy", 2))
+    assert pack.n_pages == 2 and pack.pos == 5
+    # pool slices came from the right physical pages, in logical order
+    np.testing.assert_array_equal(pack.tree["kv"]["k"][:, 0],
+                                  np.asarray(cache["kv"]["k"][:, 4]))
+    np.testing.assert_array_equal(pack.tree["kv"]["k"][:, 1],
+                                  np.asarray(cache["kv"]["k"][:, 1]))
+
+    # land it on a DIFFERENT replica at different physical pages + row
+    dst = _toy_cache(B, P, ps, L)
+    dst = jax.tree.map(lambda ax, leaf: jnp.zeros_like(leaf)
+                       if ax == POOL_AXIS_SENTINEL else leaf,
+                       _TOY_AXES, dst)
+    dst_pages = [0, 3]
+    out = unpack_slot(dst, _TOY_AXES, 0, dst_pages, pack)
+    np.testing.assert_array_equal(np.asarray(out["kv"]["k"][:, 0]),
+                                  np.asarray(cache["kv"]["k"][:, 4]))
+    np.testing.assert_array_equal(np.asarray(out["kv"]["v"][:, 3]),
+                                  np.asarray(cache["kv"]["v"][:, 1]))
+    np.testing.assert_array_equal(np.asarray(out["state"][0]),
+                                  np.asarray(cache["state"][1]))
+    assert int(out["pos"][0]) == 5
+    # the OTHER row's state is untouched
+    np.testing.assert_array_equal(np.asarray(out["state"][1]),
+                                  np.asarray(dst["state"][1]))
+
+
+def test_unpack_rejects_mismatched_page_count():
+    B, P, ps, L = 2, 6, 2, 8
+    cache = _toy_cache(B, P, ps, L)
+    pack = pack_slot(cache, _TOY_AXES, 0, [2, 5], ("toy", 2))
+    with pytest.raises(ValueError, match="pages"):
+        unpack_slot(cache, _TOY_AXES, 0, [1], pack)
+
+
+def test_cachepack_is_plain_data():
+    pack = CachePack(cache_key=("m", 4), n_pages=0, tree={}, pos=0)
+    assert pack.cache_key == ("m", 4)

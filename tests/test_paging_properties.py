@@ -1,0 +1,114 @@
+"""Property tests for the page allocator (hypothesis).
+
+The allocator is the engine's memory-safety foundation: if two requests
+ever share a physical page, their KV writes corrupt each other and the
+paged engine silently diverges from dense. So the invariants here are
+checked over ARBITRARY alloc/free sequences, not just happy paths:
+disjointness, free+allocated conservation, free-returns-everything, and
+allocation failure iff demand exceeds free pages (all-or-nothing).
+
+Pure Python — no model, no jax.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.paging import PageAllocator, pages_needed  # noqa: E402
+
+# op stream: (kind, rid, n_pages) — rids collide on purpose so repeated
+# alloc to one holder and free of absent holders are both exercised
+ops = st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                         st.integers(min_value=0, max_value=7),
+                         st.integers(min_value=0, max_value=12)),
+               max_size=60)
+
+
+def _check_disjoint(alloc, holders):
+    held = [p for rid in holders for p in alloc.pages_of(rid)]
+    assert len(held) == len(set(held)), "two requests share a page"
+    assert all(0 <= p < alloc.num_pages for p in held)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(min_value=1, max_value=24), ops)
+def test_allocator_invariants_under_arbitrary_sequences(num_pages, ops):
+    alloc = PageAllocator(num_pages, page_size=4)
+    model = {}                                     # rid -> n pages held
+    for kind, rid, n in ops:
+        free_before = alloc.free_pages
+        if kind == "alloc":
+            grant = alloc.alloc(rid, n)
+            # failure iff demand exceeds free pages — and all-or-nothing:
+            # a failed alloc leaves the allocator untouched
+            if n > free_before:
+                assert grant is None
+                assert alloc.free_pages == free_before
+            else:
+                assert grant is not None and len(grant) == n
+                model[rid] = model.get(rid, 0) + n
+                assert alloc.free_pages == free_before - n
+        else:
+            freed = alloc.free(rid)
+            assert freed == model.pop(rid, 0)
+            assert alloc.free_pages == free_before + freed
+        # conservation law, exact at every step
+        assert alloc.free_pages + alloc.used_pages == alloc.num_pages
+        assert alloc.used_pages == sum(model.values())
+        _check_disjoint(alloc, model)
+        # per-request tables agree with the model
+        for rid_, n_ in model.items():
+            assert len(alloc.pages_of(rid_)) == n_
+            assert alloc.holds(rid_)
+    # freeing everything returns every page
+    for rid in list(model):
+        alloc.free(rid)
+    assert alloc.free_pages == alloc.num_pages
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(min_value=1, max_value=24),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=7),
+                          st.integers(min_value=0, max_value=12)),
+                max_size=30))
+def test_free_returns_all_pages_and_forgets_the_holder(num_pages, grants):
+    alloc = PageAllocator(num_pages, page_size=4)
+    held = {}
+    for rid, n in grants:
+        g = alloc.alloc(rid, n)
+        if g is not None:
+            held.setdefault(rid, []).extend(g)
+    for rid, pages in held.items():
+        assert alloc.pages_of(rid) == pages       # logical order preserved
+        assert alloc.free(rid) == len(pages)
+        assert not alloc.holds(rid)
+        assert alloc.pages_of(rid) == []
+        assert alloc.free(rid) == 0               # double-free is benign
+    assert alloc.free_pages == alloc.num_pages
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.integers(min_value=1, max_value=64))
+def test_pages_needed_is_exact_ceiling(n_tokens, page_size):
+    n = pages_needed(n_tokens, page_size)
+    assert n * page_size >= n_tokens              # covers the demand
+    assert (n - 1) * page_size < max(n_tokens, 1)  # and is minimal
+    assert pages_needed(0, page_size) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=16), ops)
+def test_peak_used_is_a_high_water_mark(num_pages, ops):
+    alloc = PageAllocator(num_pages, page_size=4)
+    peak = 0
+    for kind, rid, n in ops:
+        if kind == "alloc":
+            alloc.alloc(rid, n)
+        else:
+            alloc.free(rid)
+        peak = max(peak, alloc.used_pages)
+        assert alloc.peak_used == peak

@@ -121,3 +121,40 @@ def test_slo_drain_all_sorted():
 def test_slo_capacity_validation():
     with pytest.raises(ValueError, match="capacity"):
         SLOQueue(capacity=0)
+
+
+def test_slo_none_deadline_never_expires():
+    """Regression: ``deadline_s=None`` crashed push/pop with a TypeError
+    under ``drop_expired=True`` (only the ordering key handled None);
+    None must mean never-expiring, like math.inf."""
+    drops = []
+    q = SLOQueue(on_drop=lambda r, why: drops.append((r.rid, why)))
+    free = _req(0, deadline=None)
+    assert q.push(free, now=1e9)        # used to raise TypeError
+    assert q.pop(now=1e12) is free      # never dropped as expired
+    assert drops == []
+    # sorts with the inf-deadline cohort: after finite deadlines
+    q.push(_req(1, deadline=None))
+    q.push(_req(2, deadline=5.0))
+    assert [r.rid for r in _pop_all(q)] == [2, 1]
+
+
+def test_slo_page_budget_admission():
+    """``budget`` + ``cost`` bound the backlog by an additive resource
+    (pages): pushes beyond the budget shed with reason "budget", pops
+    release it, requeue_front is exempt, drain_all resets it."""
+    drops = []
+    q = SLOQueue(budget=10, cost=lambda r: len(r.prompt),
+                 on_drop=lambda r, why: drops.append((r.rid, why)))
+    a, b = _req(0), _req(1)             # 3-token prompts
+    assert q.push(a) and q.push(b)
+    assert q.used_budget == 6
+    fat = Request(rid=2, prompt=[0] * 5)
+    assert not q.push(fat)              # 6 + 5 > 10
+    assert drops == [(2, "budget")]
+    assert q.pop() is a and q.used_budget == 3
+    assert q.push(fat)                  # released budget readmits it
+    q.requeue_front(a)                  # exempt, like capacity
+    assert q.used_budget == 11
+    q.drain_all()
+    assert q.used_budget == 0

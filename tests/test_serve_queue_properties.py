@@ -1,0 +1,249 @@
+"""Property tests for both queue disciplines (hypothesis).
+
+The queue is the engine's only admission point, so its invariants are
+load-bearing for everything the fuzz suite checks downstream: pop order
+must be total on ``(priority, deadline, seq)`` under ANY interleaving of
+push/pop/requeue, capacity/budget must never be exceeded, and every
+request must leave the queue exactly once (popped, drained, or observed
+by ``on_drop``) — a request silently duplicated or lost here becomes a
+double-completed or vanished request in the engine.
+
+Pure Python — no model, no jax.
+"""
+import math
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import FIFOQueue, Request, SLOQueue  # noqa: E402
+
+
+def _req(rid, priority=0, deadline=math.inf, plen=3):
+    return Request(rid=rid, prompt=[1] * plen, priority=priority,
+                   deadline_s=deadline)
+
+
+def _key_of(req):
+    d = req.deadline_s
+    return (req.priority, math.inf if d is None else d)
+
+
+# deadlines include None (never expires), inf, and finite values that can
+# expire under the `now` values the interleavings use
+deadlines = st.one_of(st.none(), st.just(math.inf),
+                      st.floats(min_value=0.0, max_value=100.0,
+                                allow_nan=False))
+req_specs = st.tuples(st.integers(min_value=0, max_value=3), deadlines)
+
+
+# -- FIFO --------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.sampled_from(["push", "pop", "requeue"]), max_size=40))
+def test_fifo_matches_deque_model(ops):
+    """FIFO pop order equals arrival order under arbitrary push/pop/
+    requeue_front interleavings (requeue goes to the head)."""
+    q = FIFOQueue()
+    model = []
+    nxt = 0
+    for op in ops:
+        if op == "push":
+            r = _req(nxt)
+            nxt += 1
+            assert q.push(r)
+            model.append(r)
+        elif op == "pop":
+            got = q.pop()
+            want = model.pop(0) if model else None
+            assert got is want
+        else:  # requeue a fresh request at the front
+            r = _req(nxt)
+            nxt += 1
+            q.requeue_front(r)
+            model.insert(0, r)
+    assert q.drain_all() == model
+
+
+# -- SLO: ordering totality --------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(req_specs, max_size=30))
+def test_slo_pop_order_total_on_priority_deadline_seq(specs):
+    """With no expiry pressure, popping everything yields EXACTLY the
+    stable sort of the pushes by (priority, effective deadline): seq
+    breaks ties FIFO, None and inf deadlines sort together at the end."""
+    q = SLOQueue(drop_expired=False)
+    reqs = [_req(i, priority=p, deadline=d)
+            for i, (p, d) in enumerate(specs)]
+    for r in reqs:
+        assert q.push(r)
+    got = []
+    while len(q):
+        got.append(q.pop())
+    want = sorted(reqs, key=lambda r: (_key_of(r), r.rid))
+    assert got == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(req_specs, min_size=1, max_size=30),
+       st.data())
+def test_slo_order_invariant_under_interleaving(specs, data):
+    """Interleaving pops among the pushes never changes relative order:
+    each pop returns the minimum-key request among those currently
+    queued (totality is a property of the *content*, not the schedule)."""
+    q = SLOQueue(drop_expired=False)
+    queued = []
+    for i, (p, d) in enumerate(specs):
+        r = _req(i, priority=p, deadline=d)
+        assert q.push(r)
+        queued.append(r)
+        if queued and data.draw(st.booleans()):
+            got = q.pop()
+            want = min(queued, key=lambda r: (_key_of(r), r.rid))
+            assert got is want
+            queued.remove(got)
+    while queued:
+        got = q.pop()
+        want = min(queued, key=lambda r: (_key_of(r), r.rid))
+        assert got is want
+        queued.remove(got)
+    assert q.pop() is None
+
+
+# -- SLO: capacity + budget never exceeded -----------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.sampled_from(["push", "pop"]), max_size=60),
+       st.integers(min_value=1, max_value=5))
+def test_slo_capacity_never_exceeded(ops, cap):
+    q = SLOQueue(capacity=cap)
+    nxt = 0
+    for op in ops:
+        if op == "push":
+            full = len(q) >= cap
+            accepted = q.push(_req(nxt))
+            nxt += 1
+            assert accepted == (not full)
+        else:
+            q.pop()
+        assert len(q) <= cap
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["push", "pop"]),
+                          st.integers(min_value=1, max_value=4)),
+                max_size=60),
+       st.integers(min_value=2, max_value=8))
+def test_slo_budget_never_exceeded(ops, budget):
+    """used_budget tracks exactly the sum of queued costs and never
+    passes the budget on accepted pushes."""
+    q = SLOQueue(budget=budget, cost=lambda r: len(r.prompt))
+    nxt = 0
+    queued_cost = 0.0
+    for op, plen in ops:
+        if op == "push":
+            r = _req(nxt, plen=plen)
+            nxt += 1
+            if q.push(r):
+                queued_cost += plen
+        else:
+            r = q.pop()
+            if r is not None:
+                queued_cost -= len(r.prompt)
+        assert q.used_budget == queued_cost
+        assert q.used_budget <= budget
+
+
+# -- SLO: requeue_front beats same-key arrivals ------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(req_specs, min_size=1, max_size=15), st.data())
+def test_slo_requeue_front_beats_same_key(specs, data):
+    """A requeued request pops before every queued request with the same
+    or worse (priority, deadline) key, regardless of arrival order —
+    but never before a strictly better key."""
+    q = SLOQueue(drop_expired=False)
+    fresh = [_req(i, priority=p, deadline=d)
+             for i, (p, d) in enumerate(specs)]
+    for r in fresh:
+        q.push(r)
+    i = data.draw(st.integers(min_value=0, max_value=len(specs) - 1))
+    p, d = specs[i]
+    revoked = _req(1000, priority=p, deadline=d)
+    q.requeue_front(revoked)
+    before = []
+    while True:
+        r = q.pop()
+        if r is revoked:
+            break
+        before.append(r)
+    for r in before:
+        assert _key_of(r) < _key_of(revoked)
+
+
+# -- SLO: on_drop exactly-once conservation ----------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["push", "pop", "drain"]),
+                          req_specs,
+                          st.floats(min_value=0.0, max_value=150.0,
+                                    allow_nan=False)),
+                max_size=40),
+       st.integers(min_value=1, max_value=3))
+def test_slo_every_request_leaves_exactly_once(ops, cap):
+    """Conservation: every submitted request is observed exactly once —
+    popped, drained, or reported to on_drop (capacity/expired). Nothing
+    vanishes, nothing duplicates."""
+    seen = {}
+
+    def on_drop(r, why):
+        seen[r.rid] = seen.get(r.rid, 0) + 1
+
+    q = SLOQueue(capacity=cap, on_drop=on_drop)
+    nxt = 0
+    submitted = set()
+    for op, (p, d), now in ops:
+        if op == "push":
+            r = _req(nxt, priority=p, deadline=d)
+            submitted.add(nxt)
+            nxt += 1
+            if q.push(r, now=now):
+                assert r.rid not in seen
+            else:
+                assert seen.get(r.rid) == 1
+        elif op == "pop":
+            r = q.pop(now=now)
+            if r is not None:
+                seen[r.rid] = seen.get(r.rid, 0) + 1
+        else:
+            for r in q.drain_all():
+                seen[r.rid] = seen.get(r.rid, 0) + 1
+    for r in q.drain_all():
+        seen[r.rid] = seen.get(r.rid, 0) + 1
+    assert set(seen) == submitted
+    assert all(n == 1 for n in seen.values())
+
+
+# -- SLO: drain_all returns schedule order -----------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(req_specs, max_size=25))
+def test_slo_drain_all_is_schedule_order(specs):
+    """drain_all returns exactly what popping everything would have
+    returned (no expiry): the migration path preserves SLO order."""
+    q1 = SLOQueue(drop_expired=False)
+    q2 = SLOQueue(drop_expired=False)
+    for i, (p, d) in enumerate(specs):
+        q1.push(_req(i, priority=p, deadline=d))
+        q2.push(_req(i, priority=p, deadline=d))
+    drained = [r.rid for r in q1.drain_all()]
+    popped = []
+    while len(q2):
+        popped.append(q2.pop().rid)
+    assert drained == popped
+    assert len(q1) == 0
