@@ -24,7 +24,8 @@ frontier.
 from __future__ import annotations
 
 import os
-from typing import Dict, List
+import sys
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -141,7 +142,15 @@ def _simulate(replicas: int, trace, *, model, params, max_batch: int,
     }
 
 
-def run() -> None:
+def collect(smoke: bool) -> Tuple[List[Dict], Dict, Dict]:
+    """Run the replica sweep; returns (rows, stats, meta).
+
+    ``stats`` is the flat per-config dict the trajectory test bands:
+    virtual-clock replay makes attainment/TTFT deterministic under fixed
+    seeds, so the pinned ``bench/BENCH_serve.json`` is a *behavioral*
+    baseline — an engine change that silently costs SLO attainment or
+    TTFT p95 breaks the band the way a slow kernel breaks norm_wall.
+    """
     import jax
 
     from repro.config import get_config
@@ -151,7 +160,6 @@ def run() -> None:
     from repro.serving import ServeEngine
     from repro.traces.requests import synthetic_request_trace
 
-    smoke = os.environ.get("SERVE_FRONTIER_SMOKE") == "1"
     horizon_s = 120.0 if smoke else 600.0
     sweep = (1, 2) if smoke else (1, 2, 3, 4)
     # tight deadlines relative to the virtual decode cadence (0.05 s/step)
@@ -231,20 +239,30 @@ def run() -> None:
                 1.0 - r["kv_peak_positions"] / d if d else 0.0)
             stats[f"paged.r{r['replicas']}.pages_shipped"] = float(
                 r["pages_shipped"])
+    meta = {"trace": trace.name, "n_requests": trace.n_requests,
+            "horizon_s": horizon_s, "page_size": page_size,
+            "price_hr": price_hr, "smoke": smoke}
+    return rows, stats, meta
+
+
+def run(smoke: bool = False) -> None:
+    smoke = smoke or os.environ.get("SERVE_FRONTIER_SMOKE") == "1"
+    rows, stats, meta = collect(smoke)
     emit("BENCH_serve", rows,
-         notes=(f"request trace '{trace.name}' ({trace.n_requests} reqs, "
-                f"{horizon_s:.0f}s horizon, burst window + mid-trace "
-                f"drain@{0.45:.2f} and hard revoke@{0.70:.2f}); virtual "
-                f"clock 0.05 s/step; dense vs paged (page_size="
-                f"{page_size}) under identical load — kv_peak_pos is "
-                f"resident cache positions (dense pins max_batch*max_len "
-                f"per replica, paged commits its allocator high-water "
-                f"mark), 'shipped' counts drain migrations landed by "
-                f"page transfer instead of replay; cost = replica-hours "
-                f"at transient V100 ${price_hr}/h; '*' rows are the "
-                f"per-impl latency-SLO-vs-cost Pareto frontier"),
+         notes=(f"request trace '{meta['trace']}' ({meta['n_requests']} "
+                f"reqs, {meta['horizon_s']:.0f}s horizon, burst window + "
+                f"mid-trace drain@{0.45:.2f} and hard revoke@{0.70:.2f}); "
+                f"virtual clock 0.05 s/step; dense vs paged (page_size="
+                f"{meta['page_size']}) under identical load — kv_peak_pos "
+                f"is resident cache positions (dense pins "
+                f"max_batch*max_len per replica, paged commits its "
+                f"allocator high-water mark), 'shipped' counts drain "
+                f"migrations landed by page transfer instead of replay; "
+                f"cost = replica-hours at transient V100 "
+                f"${meta['price_hr']}/h; '*' rows are the per-impl "
+                f"latency-SLO-vs-cost Pareto frontier"),
          stats=stats)
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv)

@@ -11,9 +11,18 @@ package gives them one instrumentation seam:
                defaults to.
 ``metrics``    labeled counters/gauges/histograms in a ``MetricsRegistry``
                (each ``Recorder`` carries one).
-``export``     Chrome-trace/Perfetto JSON for timeline viewing, CSV and
-               flat stats summaries compatible with
+``export``     Chrome-trace/Perfetto JSON for timeline viewing (with
+               cross-track flow arrows for trace-correlated requests),
+               CSV and flat stats summaries compatible with
                ``benchmarks/common.emit(stats=)``.
+``timeseries`` windowed ring-buffer time-series: labeled gauges sampled
+               on a sim-clock cadence, JSONL/CSV export, plus the
+               standard serving signal set (``attach_serve_cluster``).
+``slo``        rolling SLO health: attainment/TTFT percentiles,
+               multi-window burn rates, typed alerts the autoscaler
+               consumes as a first-class scale-up signal.
+``report``     self-contained HTML/text ops report (sparklines, alert
+               table, per-replica summary) from the above artifacts.
 ``profiling``  opt-in ``jax.profiler`` bridge (``annotate_span``,
                ``start_trace``) so device traces line up with sim events;
                the only module here that touches jax, lazily.
@@ -24,7 +33,7 @@ stack without dragging in the training stack.
 """
 from repro.obs.events import (CAT_BENCH, CAT_GYM, CAT_KERNEL,  # noqa: F401
                               CAT_POLICY, CAT_SERVE, CAT_SIM, CAT_TRAIN,
-                              EV_ALLREDUCE, EV_COMPLETE, EV_DECODE,
+                              EV_ALERT, EV_ALLREDUCE, EV_COMPLETE, EV_DECODE,
                               EV_DRAIN, EV_ENQUEUE, EV_EPISODE, EV_MIGRATE,
                               EV_PREFILL, EV_REJECT, EV_REPLAN, EV_REVOKE_FIRE,
                               EV_REVOKE_WARN, EV_SLOT_JOIN, EV_SLOT_RELEASE,
@@ -36,3 +45,10 @@ from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
 from repro.obs.export import (metrics_stats, perf_entry,  # noqa: F401
                               to_chrome_trace, validate_chrome_trace,
                               write_chrome_trace, write_events_csv)
+from repro.obs.timeseries import (TimeSeries, TimeSeriesSampler,  # noqa: F401
+                                  attach_serve_cluster, load_series_jsonl)
+from repro.obs.slo import (ALERT_POOL_EXHAUSTION,  # noqa: F401
+                           ALERT_REVOCATION_STORM, ALERT_SLO_BURN,
+                           Alert, SLOMonitor, SLOSpec)
+from repro.obs.report import (render_report, render_text,  # noqa: F401
+                              validate_report)

@@ -61,6 +61,7 @@ EV_REJECT = "request.reject"           # serving: shed by admission control
 EV_DRAIN = "drain"                     # serving: replica draining span
 EV_EPISODE = "episode"                 # one whole gym episode span
 EV_TRIAL_DONE = "trial.complete"       # MC trial reached total_steps
+EV_ALERT = "alert"                     # SLO monitor fired a typed alert
 
 TAXONOMY = {
     EV_REVOKE_WARN: "provider revocation warning (fast-save window opens)",
@@ -80,6 +81,8 @@ TAXONOMY = {
     EV_DRAIN: "serving: replica draining after a revocation warning",
     EV_EPISODE: "one gym episode end-to-end",
     EV_TRIAL_DONE: "MC trial completed its virtual workload",
+    EV_ALERT: "SLO monitor alert (burn rate, revocation storm, pool "
+              "exhaustion)",
 }
 
 PH_SPAN = "X"       # complete span (has a duration)
@@ -90,7 +93,15 @@ _JSONL_VERSION = 1
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One observed event. ``ph`` is Chrome-trace phase: span or instant."""
+    """One observed event. ``ph`` is Chrome-trace phase: span or instant.
+
+    ``trace_id``/``span_id``/``parent_id`` are the correlation fields: all
+    events of one logical operation (a serving request's whole lifecycle,
+    across migrations and replicas) share a ``trace_id``; each event gets
+    its own ``span_id`` and points at the span that caused it via
+    ``parent_id`` (``None`` marks the root). The exporter turns
+    cross-track parent links into Perfetto flow arrows.
+    """
     name: str
     ph: str                       # PH_SPAN | PH_INSTANT
     cat: str                      # CAT_* layer tag
@@ -100,6 +111,9 @@ class Event:
     t_sim: Optional[float] = None    # sim-clock seconds (or step index)
     dur_sim: Optional[float] = None  # span duration on the sim clock
     args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    trace_id: Optional[str] = None   # correlates one operation's events
+    span_id: Optional[str] = None    # this event's own span identity
+    parent_id: Optional[str] = None  # causal predecessor span (None=root)
 
     def to_json(self) -> Dict[str, Any]:
         d = {"name": self.name, "ph": self.ph, "cat": self.cat,
@@ -109,6 +123,12 @@ class Event:
             d["t_sim"] = self.t_sim
         if self.dur_sim is not None:
             d["dur_sim"] = self.dur_sim
+        if self.trace_id is not None:
+            d["trace_id"] = self.trace_id
+        if self.span_id is not None:
+            d["span_id"] = self.span_id
+        if self.parent_id is not None:
+            d["parent_id"] = self.parent_id
         if self.args:
             d["args"] = self.args
         return d
@@ -120,7 +140,9 @@ class Event:
                      t_wall=d.get("t_wall", 0.0),
                      dur_wall=d.get("dur_wall", 0.0),
                      t_sim=d.get("t_sim"), dur_sim=d.get("dur_sim"),
-                     args=d.get("args", {}))
+                     args=d.get("args", {}),
+                     trace_id=d.get("trace_id"), span_id=d.get("span_id"),
+                     parent_id=d.get("parent_id"))
 
 
 class Recorder:
@@ -156,10 +178,14 @@ class Recorder:
         self.events.append(ev)
 
     def instant(self, name: str, *, cat: str, track: str = "main",
-                sim_t: Optional[float] = None, **args: Any) -> None:
+                sim_t: Optional[float] = None,
+                trace_id: Optional[str] = None,
+                span_id: Optional[str] = None,
+                parent_id: Optional[str] = None, **args: Any) -> None:
         self.events.append(Event(name=name, ph=PH_INSTANT, cat=cat,
                                  track=track, t_wall=self.now(),
-                                 t_sim=sim_t, args=args))
+                                 t_sim=sim_t, args=args, trace_id=trace_id,
+                                 span_id=span_id, parent_id=parent_id))
 
     def sim_span(self, name: str, *, cat: str, t0: float, t1: float,
                  track: str = "main", **args: Any) -> None:
@@ -172,13 +198,18 @@ class Recorder:
     def span_at(self, name: str, *, cat: str, t_wall: float,
                 dur_wall: float, track: str = "main",
                 sim_t: Optional[float] = None,
-                dur_sim: Optional[float] = None, **args: Any) -> None:
+                dur_sim: Optional[float] = None,
+                trace_id: Optional[str] = None,
+                span_id: Optional[str] = None,
+                parent_id: Optional[str] = None, **args: Any) -> None:
         """Record a span retrospectively from explicit wall timestamps
         (serving retires a request long after its prefill started)."""
         self.events.append(Event(name=name, ph=PH_SPAN, cat=cat,
                                  track=track, t_wall=t_wall,
                                  dur_wall=max(0.0, dur_wall), t_sim=sim_t,
-                                 dur_sim=dur_sim, args=args))
+                                 dur_sim=dur_sim, args=args,
+                                 trace_id=trace_id, span_id=span_id,
+                                 parent_id=parent_id))
 
     @contextlib.contextmanager
     def span(self, name: str, *, cat: str, track: str = "main",
@@ -252,17 +283,35 @@ NULL = NullRecorder()
 
 
 def load_events(path: str) -> List[Event]:
-    """Inverse of ``Recorder.flush``: the event list (header skipped)."""
+    """Inverse of ``Recorder.flush``: the event list (header skipped).
+
+    A trailing *partial* line — the signature of a writer killed mid-flush
+    (revocation firing during a crash dump) — is tolerated: the complete
+    prefix loads, the torn tail is dropped. A malformed line anywhere
+    before the tail is still corruption and raises.
+    """
     events: List[Event] = []
     with open(path) as f:
-        header = json.loads(next(f))
-        if header.get("jsonl_version") != _JSONL_VERSION:
-            raise ValueError(f"unsupported event-log version in {path}: "
-                             f"{header.get('jsonl_version')!r}")
-        for line in f:
-            line = line.strip()
-            if line:
-                events.append(Event.from_json(json.loads(line)))
+        lines = f.read().splitlines()
+    if not lines:
+        raise ValueError(f"empty event log {path}")
+    header = json.loads(lines[0])
+    if header.get("jsonl_version") != _JSONL_VERSION:
+        raise ValueError(f"unsupported event-log version in {path}: "
+                         f"{header.get('jsonl_version')!r}")
+    last = len(lines) - 1
+    for i, line in enumerate(lines[1:], start=1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            d = json.loads(line)
+        except json.JSONDecodeError:
+            if i == last:
+                break                 # crash-truncated tail: keep the prefix
+            raise ValueError(f"corrupt event log {path}: malformed JSON on "
+                             f"line {i + 1} (not the final line)")
+        events.append(Event.from_json(d))
     return events
 
 

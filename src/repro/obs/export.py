@@ -13,6 +13,14 @@ of bare pids.
 CI obs-smoke job run on every exported trace — shape drift fails loudly,
 not in the viewer.
 
+Events carrying a ``trace_id`` (the serving engine's request-correlation
+id) get **flow events**: whenever consecutive events of one trace land on
+different tracks — a request migrating between replicas, or hopping from
+its queue track to a slot track — the exporter emits an ``s``/``f``
+(flow start/finish) pair bound by a per-trace ``id``. Perfetto draws
+these as arrows, so one request's enqueue→prefill→decode→migrate→resume
+reads as a single connected path across replica tracks.
+
 ``metrics_stats``/``perf_entry`` are the one summary schema the
 benchmarks persist: ``emit(stats=)`` accepts a ``MetricsRegistry``
 directly, and both BENCH_* writers build their per-entry dicts through
@@ -43,6 +51,10 @@ def to_chrome_trace(events: Iterable[Event], *, clock: str = "sim",
     pids: Dict[str, int] = {}
     tids: Dict[tuple, int] = {}
     out: List[Dict[str, Any]] = []
+    # trace_id -> (pid, tid, end_ts) of its latest event; a change of
+    # (pid, tid) emits one s/f flow arrow from there to here
+    flows: Dict[str, tuple] = {}
+    n_flows = 0
 
     def pid_for(cat: str) -> int:
         if cat not in pids:
@@ -75,9 +87,32 @@ def to_chrome_trace(events: Iterable[Event], *, clock: str = "sim",
             rec["s"] = "t"                       # thread-scoped instant
         if ev.args:
             rec["args"] = ev.args
+        if ev.trace_id is not None:
+            rec.setdefault("args", {})
+            rec["args"] = dict(rec["args"], trace_id=ev.trace_id)
+            if ev.span_id is not None:
+                rec["args"]["span_id"] = ev.span_id
+            if ev.parent_id is not None:
+                rec["args"]["parent_id"] = ev.parent_id
         out.append(rec)
+        if ev.trace_id is not None:
+            loc = (rec["pid"], rec["tid"])
+            prev = flows.get(ev.trace_id)
+            if prev is not None and (prev[0], prev[1]) != loc:
+                # the trace moved tracks (queue->slot, replica->replica):
+                # draw the arrow from the previous event's end to here
+                n_flows += 1
+                src_ts = min(prev[2], ts)
+                common = {"name": "req_flow", "cat": "flow",
+                          "id": n_flows,
+                          "args": {"trace_id": ev.trace_id}}
+                out.append({**common, "ph": "s", "pid": prev[0],
+                            "tid": prev[1], "ts": src_ts})
+                out.append({**common, "ph": "f", "bp": "e",
+                            "pid": loc[0], "tid": loc[1], "ts": ts})
+            flows[ev.trace_id] = (loc[0], loc[1], ts + dur)
     return {"traceEvents": out, "displayTimeUnit": "ms",
-            "otherData": dict(meta or {}, clock=clock)}
+            "otherData": dict(meta or {}, clock=clock, flows=n_flows)}
 
 
 def validate_chrome_trace(trace: Dict[str, Any]) -> int:
@@ -86,20 +121,23 @@ def validate_chrome_trace(trace: Dict[str, Any]) -> int:
     Checks what the viewers actually require: ``traceEvents`` is a list;
     every entry has ``name``/``ph``/``pid``/``tid``; phases are from the
     supported set; ``X`` spans carry numeric non-negative ``ts``+``dur``;
-    instants carry ``ts``; metadata events carry ``args.name``.
+    instants carry ``ts``; metadata events carry ``args.name``. Flow
+    events (``s``/``f``) must carry an ``id``, pair up exactly (each id
+    has one start and one finish), and never flow backwards in time.
     """
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("not a Chrome trace: missing traceEvents")
     evs = trace["traceEvents"]
     if not isinstance(evs, list):
         raise ValueError("traceEvents must be a list")
+    flow_ts: Dict[Any, Dict[str, float]] = {}
     for i, e in enumerate(evs):
         where = f"traceEvents[{i}]"
         for field in ("name", "ph", "pid", "tid"):
             if field not in e:
                 raise ValueError(f"{where}: missing {field!r}")
         ph = e["ph"]
-        if ph not in ("X", "i", "M", "B", "E", "C"):
+        if ph not in ("X", "i", "M", "B", "E", "C", "s", "f"):
             raise ValueError(f"{where}: unsupported phase {ph!r}")
         if ph == "M":
             if e.get("args", {}).get("name") is None:
@@ -112,6 +150,21 @@ def validate_chrome_trace(trace: Dict[str, Any]) -> int:
             if not isinstance(dur, (int, float)) or dur < 0:
                 raise ValueError(f"{where}: X span needs dur >= 0, "
                                  f"got {dur!r}")
+        elif ph in ("s", "f"):
+            if "id" not in e:
+                raise ValueError(f"{where}: flow event without id")
+            ends = flow_ts.setdefault(e["id"], {})
+            if ph in ends:
+                raise ValueError(f"{where}: duplicate flow {ph!r} "
+                                 f"for id {e['id']!r}")
+            ends[ph] = e["ts"]
+    for fid, ends in flow_ts.items():
+        if set(ends) != {"s", "f"}:
+            raise ValueError(f"flow id {fid!r}: unpaired "
+                             f"(has {sorted(ends)})")
+        if ends["f"] < ends["s"]:
+            raise ValueError(f"flow id {fid!r}: finish at {ends['f']} "
+                             f"before start at {ends['s']}")
     return len(evs)
 
 

@@ -91,11 +91,37 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def quantile(self, q: float) -> float:
+        """Bucket-interpolated quantile estimate (Prometheus-style): find
+        the bucket the rank lands in and interpolate linearly between its
+        bounds, clamped to the exact observed [min, max]. Error is bounded
+        by the bucket width — good enough for TTFT/TPOT percentiles
+        without retaining raw samples."""
+        if self.count == 0:
+            return 0.0
+        rank = min(max(q, 0.0), 1.0) * self.count
+        cum = 0
+        for i, c in enumerate(self.bucket_counts):
+            if c == 0:
+                continue
+            lo = self.bounds[i - 1] if i > 0 else self.min
+            hi = self.bounds[i] if i < len(self.bounds) else self.max
+            lo = max(lo, self.min)
+            hi = min(hi, self.max)
+            if hi < lo:                   # single-value bucket edge case
+                hi = lo
+            if cum + c >= rank:
+                return lo + (hi - lo) * ((rank - cum) / c)
+            cum += c
+        return self.max
+
     def summary(self) -> Dict[str, float]:
         return {"count": float(self.count), "sum": self.sum,
                 "mean": self.mean,
                 "min": self.min if self.count else 0.0,
-                "max": self.max if self.count else 0.0}
+                "max": self.max if self.count else 0.0,
+                "p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p99": self.quantile(0.99)}
 
     def to_dict(self) -> Dict[str, Any]:
         return {"type": "histogram", "bounds": list(self.bounds),

@@ -18,9 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core.policy import Policy
+
+# alert kinds that demand MORE capacity (matches obs/slo.ALERT_*; string
+# literals so this module stays importable without the obs package)
+_SCALE_UP_ALERTS = ("slo_burn", "revocation_storm", "pool_exhaustion")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +36,9 @@ class ServeLoad:
     n_replicas: int               # live (non-draining) replicas
     slots_per_replica: int
     current: Optional["ReplicaDecision"] = None
+    # hot SLO-monitor alerts (obs/slo.Alert or plain kind strings): the
+    # measured-health channel, first-class alongside instantaneous load
+    alerts: Tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +58,13 @@ class ReplicaAutoscaler(Policy):
     [min_replicas, max_replicas]. Hysteresis: the incumbent survives
     unless the target differs by more than ``deadband`` replicas — the
     serving analogue of GreedyCheapest's switch margin.
+
+    Hot SLO-monitor alerts (``ServeLoad.alerts``) override the load
+    math: an active burn / revocation-storm / pool-exhaustion alert
+    means measured health is ALREADY failing, so the fleet grows by at
+    least one replica and the deadband is bypassed — hysteresis exists
+    to suppress noise, and a multi-window burn rate is by construction
+    not noise.
     """
 
     def __init__(self, *, min_replicas: int = 1, max_replicas: int = 8,
@@ -67,6 +81,11 @@ class ReplicaAutoscaler(Policy):
         self.target_util = target_util
         self.deadband = deadband
 
+    @staticmethod
+    def _alert_kinds(obs: ServeLoad) -> Tuple[str, ...]:
+        return tuple(a if isinstance(a, str) else a.kind
+                     for a in obs.alerts)
+
     def decide(self, obs: ServeLoad, ctx=None) -> ReplicaDecision:
         busy = obs.utilization * obs.n_replicas * obs.slots_per_replica
         demand_slots = busy + obs.queue_depth
@@ -74,9 +93,18 @@ class ReplicaAutoscaler(Policy):
                          / (obs.slots_per_replica * self.target_util)) \
             if demand_slots > 0 else self.min_replicas
         want = max(self.min_replicas, min(self.max_replicas, want))
-        self.last_scores = {"demand_slots": float(demand_slots),
-                            "target": float(want)}
+        kinds = self._alert_kinds(obs)
+        scale_up_alert = any(k in _SCALE_UP_ALERTS for k in kinds)
         cur = obs.current.n_replicas if obs.current is not None else None
-        if cur is not None and abs(want - cur) <= self.deadband:
+        base = cur if cur is not None else obs.n_replicas
+        if scale_up_alert:
+            # measured SLO failure: grow by >= 1 regardless of what the
+            # instantaneous load math says, capped at max_replicas
+            want = min(self.max_replicas, max(want, base + 1))
+        self.last_scores = {"demand_slots": float(demand_slots),
+                            "target": float(want),
+                            "alerts": float(len(kinds))}
+        if cur is not None and not scale_up_alert \
+                and abs(want - cur) <= self.deadband:
             want = cur
         return ReplicaDecision(n_replicas=want)

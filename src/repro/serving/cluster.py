@@ -26,13 +26,16 @@ class ServeCluster:
     def __init__(self, make_engine: Callable[[], ServeEngine], *,
                  n_replicas: int = 1,
                  clock: Optional[Callable[[], float]] = None,
-                 recorder: Optional[obs.Recorder] = None):
+                 recorder: Optional[obs.Recorder] = None,
+                 monitor=None):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         self._make_engine = make_engine
         self.replicas: List[ServeEngine] = []
         self.retired: List[ServeEngine] = []   # drained/revoked, kept for stats
         self.rec = recorder if recorder is not None else obs.NULL
+        self.monitor = monitor                 # optional SLOMonitor, shared
+        self._next_rid = 0                     # replica ids: stable, never reused
         first = make_engine()
         self.clock = clock if clock is not None else first.clock
         self._adopt(first)
@@ -42,6 +45,19 @@ class ServeCluster:
         self._t_last_bill = self.clock()
 
     def _adopt(self, eng: ServeEngine) -> None:
+        """Join a replica to the fleet: assign its stable replica_id (it
+        prefixes the engine's event tracks, so the merged timeline keeps
+        one lane per replica incarnation) and propagate the cluster's
+        recorder/monitor to engines that brought none of their own — one
+        Recorder + one SLOMonitor observe the WHOLE fleet, which is what
+        makes cross-replica trace merging and fleet-level burn rates
+        possible."""
+        eng.replica_id = self._next_rid
+        self._next_rid += 1
+        if not eng.rec.enabled and self.rec.enabled:
+            eng.rec = self.rec
+        if eng.monitor is None:
+            eng.monitor = self.monitor
         self.replicas.append(eng)
 
     def _bill(self) -> None:
@@ -110,8 +126,10 @@ class ServeCluster:
         eng = self.replicas[idx]
         migrated = eng.begin_drain(grace_tokens=grace_tokens)
         if self.rec.enabled:
+            rid = eng.replica_id if eng.replica_id is not None else idx
             self.rec.instant(obs.EV_DRAIN, cat=obs.CAT_SERVE,
-                             track=f"replica{idx}", migrated=len(migrated))
+                             track=f"replica{rid}", sim_t=self.clock(),
+                             migrated=len(migrated))
         # route around the doomed replica: it refuses admission already
         return self._reroute(migrated)
 
@@ -151,7 +169,10 @@ class ServeCluster:
         elif delta < 0:
             victims = sorted(live, key=lambda e: e.n_active + len(e.queue))
             for eng in victims[:-delta]:
-                self._reroute(eng.begin_drain(grace_tokens=0))
+                # _observe=False: a voluntary shrink must not feed the
+                # monitor's revocation-storm window (alert feedback loop)
+                self._reroute(eng.begin_drain(grace_tokens=0,
+                                              _observe=False))
         return delta
 
     # -- stepping ------------------------------------------------------------
@@ -220,3 +241,25 @@ class ServeCluster:
     @property
     def requests_imported(self) -> int:
         return self._sum("requests_imported")
+
+    def replica_summaries(self) -> List[dict]:
+        """One stats dict per replica ever billed (live + retired), in
+        replica_id order — the ops report's per-replica table."""
+        rows = []
+        for eng in self.replicas + self.retired:
+            rows.append({
+                "replica": eng.replica_id,
+                "state": ("draining" if eng.draining and eng.has_work()
+                          else "retired" if eng in self.retired
+                          else "live"),
+                "tokens_decoded": eng.tokens_decoded,
+                "tokens_lost": eng.tokens_lost,
+                "tokens_replayed": eng.tokens_replayed,
+                "requests_rejected": eng.requests_rejected,
+                "pages_shipped": eng.pages_shipped,
+                "requests_imported": eng.requests_imported,
+                "peak_pages": (eng.allocator.peak_used
+                               if eng.allocator is not None else 0),
+            })
+        rows.sort(key=lambda r: (r["replica"] is None, r["replica"]))
+        return rows

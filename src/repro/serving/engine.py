@@ -122,6 +122,13 @@ class Request:
     done: bool = False
     dropped: bool = False                # shed by admission control / expiry
     timing: RequestTiming = dataclasses.field(default_factory=RequestTiming)
+    # correlated-tracing state: one trace_id for the request's WHOLE
+    # lifetime — assigned at first emission and carried with the request
+    # across migrations, so a multi-replica timeline links every hop.
+    # _span_seq/_last_span build the parent chain in emission order.
+    trace_id: Optional[str] = None
+    _span_seq: int = 0
+    _last_span: Optional[str] = None
     # prefix-replay source after a migration: the exact token stream an
     # undisturbed engine would have consumed up to the migration point
     _replay: Optional[List[int]] = None
@@ -152,7 +159,9 @@ class ServeEngine:
                  shared_fns: Optional[Tuple] = None,
                  cache_impl: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 ship_pages: bool = True):
+                 ship_pages: bool = True,
+                 replica_id: Optional[int] = None,
+                 monitor=None):
         if attn_impl is not None and attn_impl != model.cfg.attn_impl:
             # Serving hot path: flip decode attention onto the Pallas kernel
             # (or back to xla) without asking callers to rebuild the model.
@@ -240,6 +249,13 @@ class ServeEngine:
         self.requests_imported = 0    # migrations landed without replay
         self.draining = False
         self.rec = recorder if recorder is not None else obs.NULL
+        # fleet identity + health feed: replica_id prefixes this engine's
+        # event tracks (None = solo engine, legacy track names) and is
+        # assigned by ServeCluster._adopt; monitor is an SLOMonitor-shaped
+        # observer fed at retire/drop/drain/revoke — like the recorder, it
+        # must never influence engine bookkeeping
+        self.replica_id = replica_id
+        self.monitor = monitor
         self._epoch = time.monotonic()
         self.clock = clock if clock is not None \
             else (lambda: time.monotonic() - self._epoch)
@@ -263,6 +279,30 @@ class ServeEngine:
     def _pending(self):
         """Queue view (kept for tests/introspection; index 0 = next pop)."""
         return self.queue
+
+    # -- correlated tracing --------------------------------------------------
+    def _track(self, base: str) -> str:
+        """Event track name, replica-qualified in a fleet (``r1/slot3``)
+        so merged cluster timelines keep replicas on distinct lanes;
+        solo engines keep the legacy bare names."""
+        if self.replica_id is None:
+            return base
+        return f"r{self.replica_id}/{base}"
+
+    def _span(self, req: Request) -> Dict[str, Optional[str]]:
+        """Mint the next span in ``req``'s trace: assign the trace_id on
+        first emission (it then travels WITH the request across replicas),
+        link ``parent_id`` to the previous span, and return the kwargs the
+        recorder attaches to the event. Pure observability state — only
+        called under ``rec.enabled``."""
+        if req.trace_id is None:
+            req.trace_id = f"t{req.rid}"
+        span_id = f"{req.trace_id}.{req._span_seq}"
+        parent = req._last_span
+        req._span_seq += 1
+        req._last_span = span_id
+        return {"trace_id": req.trace_id, "span_id": span_id,
+                "parent_id": parent}
 
     # -- page accounting -----------------------------------------------------
     def _pages_for(self, req: Request) -> int:
@@ -341,18 +381,24 @@ class ServeEngine:
         if rec.enabled:
             self._t_enqueue.setdefault(req.rid, rec.now())
             rec.instant(obs.EV_ENQUEUE, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", prompt_len=len(req.prompt),
-                        max_new_tokens=req.max_new_tokens, slo=req.slo)
+                        track=self._track(f"req{req.rid}"), sim_t=now,
+                        prompt_len=len(req.prompt),
+                        max_new_tokens=req.max_new_tokens, slo=req.slo,
+                        **self._span(req))
             rec.metrics.counter("requests_total").inc()
         return True
 
     def _drop(self, req: Request, reason: str) -> bool:
         req.dropped = True
         self.requests_rejected += 1
+        if self.monitor is not None:
+            self.monitor.observe_drop(req, now=self.clock(), reason=reason)
         rec = self.rec
         if rec.enabled:
             rec.instant(obs.EV_REJECT, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", reason=reason)
+                        track=self._track(f"req{req.rid}"),
+                        sim_t=self.clock(), reason=reason,
+                        **self._span(req))
             rec.metrics.counter("requests_rejected", reason=reason).inc()
         return False
 
@@ -404,7 +450,12 @@ class ServeEngine:
             if rec.enabled:
                 self._t_admit[req.rid] = rec.now()
                 rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
-                            track=f"slot{i}", rid=req.rid)
+                            track=self._track(f"slot{i}"), sim_t=now,
+                            rid=req.rid, **self._span(req))
+        if self.monitor is not None and self._paged:
+            # feed pool pressure where it changes: after admissions have
+            # taken (or failed to take) their page reservations
+            self.monitor.observe_pool(self.page_utilization, now=now)
 
     # -- cache shipping (paged migration without replay) ---------------------
     def can_import(self, req: Request) -> bool:
@@ -451,13 +502,15 @@ class ServeEngine:
             self._t_admit[req.rid] = rec.now()
             self._t_prefill_done[req.rid] = rec.now()
             rec.instant(obs.EV_SLOT_JOIN, cat=obs.CAT_SERVE,
-                        track=f"slot{row}", rid=req.rid, mode="ship",
-                        pages=pack.n_pages)
+                        track=self._track(f"slot{row}"), sim_t=now,
+                        rid=req.rid, mode="ship", pages=pack.n_pages,
+                        **self._span(req))
             rec.metrics.counter("pages_shipped").inc(pack.n_pages)
         return True
 
     # -- revocation: drain (warned) and hard revoke (fired) ------------------
-    def begin_drain(self, *, grace_tokens: int = 4) -> List[Request]:
+    def begin_drain(self, *, grace_tokens: int = 4,
+                    _observe: bool = True) -> List[Request]:
         """Revocation *warning* for this replica: admission stops, decodes
         within ``grace_tokens`` of completion finish here, and longer
         in-flight requests are migrated out via prefix replay — each
@@ -465,13 +518,22 @@ class ServeEngine:
         ``_replay`` stream that reproduces the undisturbed cache state on
         whatever replica resubmits it. Queued (not yet admitted) work is
         returned too. The caller routes the returned requests elsewhere.
+
+        ``_observe=False`` (autoscaler scale-down) keeps the drain out of
+        the SLO monitor's revocation window: a voluntary shrink is not a
+        provider revocation, and counting it would let the monitor's
+        storm alert feed on the autoscaler's own decisions.
         """
         self.draining = True
+        if _observe and self.monitor is not None:
+            self.monitor.observe_revocation(now=self.clock(),
+                                            replica=self.replica_id)
         rec = self.rec
         migrated: List[Request] = []
         if rec.enabled:
             rec.instant(obs.EV_REVOKE_WARN, cat=obs.CAT_SERVE,
-                        track="engine", grace_tokens=grace_tokens)
+                        track=self._track("engine"), sim_t=self.clock(),
+                        grace_tokens=grace_tokens)
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
@@ -523,10 +585,11 @@ class ServeEngine:
         rec = self.rec
         if rec.enabled:
             rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", slot=slot,
+                        track=self._track(f"req{req.rid}"),
+                        sim_t=self.clock(), slot=slot,
                         mode="ship" if shipped else "replay",
                         kept_tokens=len(req.generated),
-                        replay_tokens=replay_cost)
+                        replay_tokens=replay_cost, **self._span(req))
             rec.metrics.counter("requests_migrated").inc()
 
     @property
@@ -538,16 +601,21 @@ class ServeEngine:
         request loses its decode state and must regenerate from scratch;
         queued work is evacuated untouched. Returns everything displaced."""
         displaced: List[Request] = []
+        # one server fired = ONE revocation for the health monitor, not
+        # max_batch of them — the per-slot helper skips its observation
+        if self.monitor is not None:
+            self.monitor.observe_revocation(now=self.clock(),
+                                            replica=self.replica_id)
         for i in range(self.max_batch):
-            req = self.revoke_slot(i, _requeue=False)
+            req = self.revoke_slot(i, _requeue=False, _observe=False)
             if req is not None and not req.done:
                 displaced.append(req)
         displaced.extend(self.queue.drain_all())
         self.draining = True
         return displaced
 
-    def revoke_slot(self, slot: int, _requeue: bool = True
-                    ) -> Optional[Request]:
+    def revoke_slot(self, slot: int, _requeue: bool = True,
+                    _observe: bool = True) -> Optional[Request]:
         """Membership shrink mid-serve: the serving analogue of a worker
         revocation firing without (usable) warning. The slot's in-flight
         request loses its decode state (the cache row is reconstructible,
@@ -566,17 +634,23 @@ class ServeEngine:
         self._prefill_cursor.pop(slot, None)
         if req is not None:
             self._free_pages(req)
+        if self.monitor is not None and _observe:
+            self.monitor.observe_revocation(now=self.clock(),
+                                            replica=self.replica_id)
         rec = self.rec
         if rec.enabled:
             rec.instant(obs.EV_REVOKE_FIRE, cat=obs.CAT_SERVE,
-                        track=f"slot{slot}",
+                        track=self._track(f"slot{slot}"),
+                        sim_t=self.clock(),
                         rid=None if req is None else req.rid)
             rec.metrics.counter("revocations_total", layer="serve").inc()
         if req is not None and not req.done:
             if rec.enabled:
                 rec.instant(obs.EV_MIGRATE, cat=obs.CAT_SERVE,
-                            track=f"req{req.rid}", slot=slot, mode="restart",
-                            lost_tokens=len(req.generated))
+                            track=self._track(f"req{req.rid}"), slot=slot,
+                            sim_t=self.clock(), mode="restart",
+                            lost_tokens=len(req.generated),
+                            **self._span(req))
                 rec.metrics.counter("requests_migrated").inc()
             # regeneration restarts the lifecycle from the queue; the
             # bookkeeping reset must not depend on whether a recorder is
@@ -633,10 +707,13 @@ class ServeEngine:
         if rec.enabled:
             wnow = rec.now()
             t0 = self._t_admit.get(req.rid, wnow)
+            t_adm = req.timing.t_admit if req.timing.t_admit is not None \
+                else now
             rec.span_at(obs.EV_PREFILL, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", t_wall=t0,
-                        dur_wall=wnow - t0, slot=row,
-                        tokens=len(req.prefill_tokens))
+                        track=self._track(f"req{req.rid}"), t_wall=t0,
+                        dur_wall=wnow - t0, sim_t=t_adm,
+                        dur_sim=max(0.0, now - t_adm), slot=row,
+                        tokens=len(req.prefill_tokens), **self._span(req))
             self._t_prefill_done[req.rid] = wnow
             rec.metrics.counter("tokens_prefilled").inc(
                 len(req.prefill_tokens))
@@ -757,21 +834,27 @@ class ServeEngine:
 
     def _retire(self, i: int, req: Request) -> None:
         req.done = True
-        req.timing.t_complete = self.clock()
+        t_done = self.clock()
+        req.timing.t_complete = t_done
         self.slots[i] = None
         self._prefill_cursor.pop(i, None)
         self._free_pages(req)
+        if self.monitor is not None:
+            self.monitor.observe_completion(req, now=t_done)
         rec = self.rec
         if rec.enabled:
             now = rec.now()
             t0 = self._t_prefill_done.get(req.rid, now)
+            t_pf = req.timing.t_prefill_done \
+                if req.timing.t_prefill_done is not None else t_done
             rec.span_at(obs.EV_DECODE, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}", t_wall=t0,
-                        dur_wall=now - t0, slot=i,
-                        tokens=len(req.generated))
+                        track=self._track(f"req{req.rid}"), t_wall=t0,
+                        dur_wall=now - t0, sim_t=t_pf,
+                        dur_sim=max(0.0, t_done - t_pf), slot=i,
+                        tokens=len(req.generated), **self._span(req))
             rec.instant(obs.EV_COMPLETE, cat=obs.CAT_SERVE,
-                        track=f"req{req.rid}",
-                        tokens=len(req.generated))
+                        track=self._track(f"req{req.rid}"), sim_t=t_done,
+                        tokens=len(req.generated), **self._span(req))
             rec.metrics.counter("requests_completed").inc()
             t_q = self._t_enqueue.get(req.rid, now)
             rec.metrics.histogram("request_latency_ms").observe(

@@ -62,6 +62,25 @@ class FIFOQueue:
     def __getitem__(self, i: int) -> Request:
         return self._items[i]
 
+    def oldest_wait_s(self, now: float) -> float:
+        """Age of the longest-waiting queued request (0.0 when empty) —
+        the backlog-staleness gauge the time-series sampler polls."""
+        return _oldest_wait(self._items, now)
+
+
+def _oldest_wait(reqs, now: float) -> float:
+    """Max queueing age across ``reqs`` on the engine clock. A request
+    re-admitted after a migration keeps its ORIGINAL enqueue time — its
+    user has been waiting since then, which is exactly what the gauge
+    should say."""
+    oldest = 0.0
+    for req in reqs:
+        t0 = req.timing.t_enqueue
+        if t0 is None:
+            t0 = req.arrival_s
+        oldest = max(oldest, now - t0)
+    return oldest
+
 
 def _deadline_of(req: Request) -> float:
     """Effective deadline for ordering AND expiry: ``None`` means the
@@ -165,3 +184,7 @@ class SLOQueue:
 
     def __getitem__(self, i: int) -> Request:
         return [entry[-1] for entry in sorted(self._heap)][i]
+
+    def oldest_wait_s(self, now: float) -> float:
+        """Age of the longest-waiting queued request (0.0 when empty)."""
+        return _oldest_wait((entry[-1] for entry in self._heap), now)

@@ -37,6 +37,13 @@ BENCHES = {
     "BENCH_pipeline": "benchmarks.pipeline_bench",
 }
 
+# serving-quality bands (BENCH_serve is a *behavioral* trajectory: the
+# replica sweep replays on a virtual clock, so attainment and TTFT are
+# deterministic under fixed seeds — no calibration, no retry needed)
+ATTAIN_MAX_DROP = 0.05        # absolute SLO-attainment drop allowed
+TTFT_BAND = 1.25              # >25% TTFT p95 growth fails
+TTFT_FLOOR_S = 0.25           # absolute slack so a 0.0s baseline can move
+
 
 def _collect(modname):
     mod = importlib.import_module(modname)
@@ -96,6 +103,49 @@ def test_bench_trajectory_within_band(name, request):
         f"{name}: perf regression beyond the {SLOWDOWN_BAND}x band "
         f"(reproduced on re-measurement):\n  "
         + "\n  ".join(over.values()))
+
+
+def test_serve_trajectory_within_band(request):
+    """BENCH_serve quality trajectory: every swept configuration's SLO
+    attainment may not drop more than ATTAIN_MAX_DROP below the pinned
+    baseline, and TTFT p95 may not grow past the TTFT_BAND. Engine
+    changes that quietly trade away serving quality fail here the same
+    way slow kernels fail the norm_wall band."""
+    from benchmarks.serve_frontier import collect
+    _, stats, meta = collect(smoke=True)
+    path = os.path.join(BENCH_DIR, "BENCH_serve.json")
+
+    if request.config.getoption("--update-bench-baseline"):
+        os.makedirs(BENCH_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"meta": meta, "stats": stats}, f,
+                      indent=1, sort_keys=True)
+        pytest.skip(f"serve baseline rewritten: {path}")
+
+    assert os.path.exists(path), (
+        f"missing serve baseline {path} — the serving-quality trajectory "
+        f"must be pinned; generate it with --update-bench-baseline and "
+        f"commit it")
+    with open(path) as f:
+        base = json.load(f)["stats"]
+
+    missing = set(base) - set(stats)
+    assert not missing, (
+        f"BENCH_serve: stats vanished from the sweep: {sorted(missing)} "
+        f"— a configuration silently dropped out of the trajectory")
+
+    bad = []
+    for key in sorted(base):
+        b, c = base[key], stats[key]
+        if key.endswith(".attainment") and c < b - ATTAIN_MAX_DROP:
+            bad.append(f"{key}: attainment {c:.3f} vs baseline {b:.3f} "
+                       f"(max drop {ATTAIN_MAX_DROP})")
+        elif key.endswith(".ttft_p95_s") \
+                and c > max(b * TTFT_BAND, b + TTFT_FLOOR_S):
+            bad.append(f"{key}: ttft_p95 {c:.3f}s vs baseline {b:.3f}s "
+                       f"(band {TTFT_BAND}x)")
+    assert not bad, ("BENCH_serve: serving-quality regression beyond the "
+                     "band:\n  " + "\n  ".join(bad))
 
 
 def test_bench_artifacts_land_in_artifacts_bench():

@@ -1,0 +1,435 @@
+"""Live telemetry: time-series sampler, SLO burn-rate monitor, alert-
+driven autoscaling, ops report, and the satellite fixes (partial-line
+event logs, bucket quantiles)."""
+import json
+import math
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.config import get_config
+from repro.models import layers as L
+from repro.models.builder import build_model
+from repro.obs.metrics import Histogram
+from repro.obs.slo import (ALERT_POOL_EXHAUSTION, ALERT_REVOCATION_STORM,
+                           ALERT_SLO_BURN, SLOMonitor, SLOSpec)
+from repro.obs.timeseries import (TimeSeries, TimeSeriesSampler,
+                                  attach_serve_cluster, load_series_jsonl)
+from repro.obs.report import render_report, render_text, validate_report
+from repro.serving import Request, ServeCluster, ServeEngine
+from repro.serving.autoscale import ReplicaAutoscaler, ServeLoad
+
+
+# ---------------------------------------------------------------------------
+# satellites: load_events partial tail, Histogram quantiles
+# ---------------------------------------------------------------------------
+
+def _flushed_log(tmp_path, n=5):
+    rec = obs.Recorder(deterministic=True)
+    for i in range(n):
+        rec.instant("x", cat=obs.CAT_SERVE, track="t", i=i)
+    path = str(tmp_path / "events.jsonl")
+    rec.flush(path)
+    return path
+
+
+def test_load_events_tolerates_truncated_tail(tmp_path):
+    """A writer killed mid-flush leaves a torn final line: the complete
+    prefix loads instead of raising."""
+    path = _flushed_log(tmp_path, n=5)
+    full = obs.load_events(path)
+    assert len(full) == 5
+    raw = open(path).read().rstrip("\n")
+    torn = raw[:len(raw) - 17]              # cut into the final JSON object
+    open(path, "w").write(torn)
+    events = obs.load_events(path)
+    assert len(events) == 4
+    assert [e.args["i"] for e in events] == [0, 1, 2, 3]
+
+
+def test_load_events_rejects_mid_file_corruption(tmp_path):
+    path = _flushed_log(tmp_path, n=5)
+    lines = open(path).read().splitlines()
+    lines[2] = lines[2][:10]                # corrupt a NON-final line
+    open(path, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="malformed JSON"):
+        obs.load_events(path)
+
+
+def test_histogram_bucket_quantiles():
+    h = Histogram(bounds=(10.0, 20.0, 50.0, 100.0))
+    for v in [1, 2, 3, 4, 5, 6, 7, 8, 9]:       # all in the first bucket
+        h.observe(float(v))
+    h.observe(95.0)                             # one tail outlier
+    s = h.summary()
+    for k in ("p50", "p90", "p99"):
+        assert k in s
+    # p50 inside [min, first bound]; p99 lands in the outlier's bucket
+    assert 1.0 <= s["p50"] <= 10.0
+    assert 50.0 <= s["p99"] <= 95.0
+    assert s["p50"] <= s["p90"] <= s["p99"] <= h.max
+    # exact-edge behaviors
+    assert Histogram().quantile(0.5) == 0.0     # empty -> 0
+    one = Histogram(bounds=(10.0,))
+    one.observe(7.0)
+    assert one.quantile(0.5) == pytest.approx(7.0)  # single value -> itself
+
+
+# ---------------------------------------------------------------------------
+# time-series sampler
+# ---------------------------------------------------------------------------
+
+def test_timeseries_ring_buffer_and_window():
+    ts = TimeSeries("x", {"a": 1}, capacity=4)
+    for t in range(10):
+        ts.append(float(t), float(t * t))
+    assert len(ts) == 4
+    assert ts.times == [6.0, 7.0, 8.0, 9.0]     # oldest evicted
+    assert ts.window(7.0, 8.0) == [(7.0, 49.0), (8.0, 64.0)]
+    assert ts.key == "x{a=1}"
+
+
+def test_sampler_cadence_rates_and_fanout(tmp_path):
+    s = TimeSeriesSampler(interval_s=1.0, capacity=64)
+    state = {"total": 0.0, "replicas": [0]}
+    s.register("gauge", lambda now: now * 2.0)
+    s.register_rate("rate", lambda now: state["total"])
+    s.register_many(lambda now: [("per_r", {"replica": r}, float(r))
+                                 for r in state["replicas"]])
+    s.maybe_sample(0.0)
+    assert not s.maybe_sample(0.5)              # sub-interval: no-op
+    state["total"] = 30.0
+    state["replicas"] = [0, 1]                  # label set grows mid-run
+    assert s.maybe_sample(1.5)
+    series = s.series()
+    assert series["gauge"].values == [0.0, 3.0]
+    assert series["rate"].values == [0.0, 30.0 / 1.5]   # (30-0)/(1.5-0)
+    assert series["per_r{replica=1}"].values == [1.0]   # joined late
+    path = str(tmp_path / "series.jsonl")
+    s.write_jsonl(path)
+    loaded = load_series_jsonl(path)
+    assert set(loaded) == set(series)
+    assert loaded["gauge"].values == series["gauge"].values
+    rows = s.to_rows()
+    assert rows[0]["t"] <= rows[-1]["t"]
+    s.write_csv(str(tmp_path / "series.csv"))
+    assert open(tmp_path / "series.csv").readline().startswith("t,series")
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    base = dict(attainment_target=0.9, long_window_s=20.0,
+                short_window_s=5.0, burn_threshold=2.0, min_requests=4,
+                cooldown_s=6.0)
+    base.update(kw)
+    return SLOSpec(**base)
+
+
+def _outcome(t_done, deadline, ttft=0.1):
+    return types.SimpleNamespace(
+        timing=types.SimpleNamespace(t_complete=t_done, ttft_s=ttft),
+        deadline_s=deadline)
+
+
+def test_burn_alert_needs_both_windows_and_respects_cooldown():
+    m = SLOMonitor(_spec())
+    # old misses only: long window burns, short window is clean
+    for t in range(4):
+        m.observe_completion(_outcome(float(t), deadline=-1.0), now=float(t))
+    for t in range(10, 14):
+        m.observe_completion(_outcome(float(t), deadline=99.0), now=float(t))
+    assert m.evaluate(now=14.0) == []           # short window healthy
+    # fresh misses: both windows burn -> exactly one alert, then cooldown
+    for t in range(15, 18):
+        m.observe_completion(_outcome(float(t), deadline=-1.0), now=float(t))
+    fired = m.evaluate(now=18.0)
+    assert [a.kind for a in fired] == [ALERT_SLO_BURN]
+    assert m.evaluate(now=19.0) == []           # inside cooldown_s=6
+    assert m.attainment(now=18.0) < 0.9
+    assert m.burn_rate(20.0, now=18.0) > 2.0
+
+
+def test_ttft_target_counts_as_miss():
+    m = SLOMonitor(_spec(ttft_target_s=0.5))
+    m.observe_completion(_outcome(1.0, deadline=99.0, ttft=2.0), now=1.0)
+    m.observe_completion(_outcome(2.0, deadline=99.0, ttft=0.1), now=2.0)
+    assert m.error_rate(20.0, now=2.0) == pytest.approx(0.5)
+    assert m.ttft_quantile(0.99, now=2.0) == pytest.approx(2.0)
+
+
+def test_tpot_quantile_tracks_decode_cadence():
+    m = SLOMonitor(_spec())
+    out = _outcome(1.0, deadline=99.0)
+    out.timing.tpot_s = lambda n: 0.05
+    out.generated = [1, 2, 3]
+    m.observe_completion(out, now=1.0)
+    assert m.tpot_quantile(0.5, now=1.0) == pytest.approx(0.05)
+    # outcomes without decode-cadence info yield None, not a crash
+    m2 = SLOMonitor(_spec())
+    m2.observe_completion(_outcome(1.0, deadline=99.0), now=1.0)
+    assert m2.tpot_quantile(0.5, now=1.0) is None
+
+
+def test_revocation_storm_and_pool_alerts():
+    m = SLOMonitor(_spec(storm_revocations=3, storm_window_s=10.0,
+                         pool_util_threshold=0.9, pool_window_s=5.0))
+    m.observe_revocation(now=1.0)
+    m.observe_revocation(now=2.0)
+    assert m.evaluate(now=3.0) == []
+    m.observe_revocation(now=4.0)
+    assert [a.kind for a in m.evaluate(now=4.0)] == [ALERT_REVOCATION_STORM]
+    # spaced-out revocations (outside the window) never trip the storm
+    m2 = SLOMonitor(_spec(storm_revocations=3, storm_window_s=10.0))
+    for t in (0.0, 20.0, 40.0):
+        m2.observe_revocation(now=t)
+        assert m2.evaluate(now=t) == []
+    m.observe_pool(0.95, now=10.0)
+    kinds = [a.kind for a in m.evaluate(now=10.0)]
+    assert ALERT_POOL_EXHAUSTION in kinds
+    # alerts mirrored onto the recorder as EV_ALERT + counter
+    rec = obs.Recorder(deterministic=True)
+    m3 = SLOMonitor(_spec(min_requests=2), recorder=rec)
+    for t in range(4):
+        m3.observe_completion(_outcome(float(t), deadline=-1.0),
+                              now=float(t))
+    m3.evaluate(now=4.0)
+    assert [e.name for e in rec.events] == [obs.EV_ALERT]
+    assert rec.metrics.counter("alerts_total", kind=ALERT_SLO_BURN).value \
+        == 1.0
+
+
+# ---------------------------------------------------------------------------
+# alert-driven autoscaling (deterministic, no model needed)
+# ---------------------------------------------------------------------------
+
+def _load(n_replicas=2, util=0.2, queue=0, alerts=(), current=None):
+    return ServeLoad(t_s=0.0, utilization=util, queue_depth=queue,
+                     n_replicas=n_replicas, slots_per_replica=4,
+                     current=current, alerts=alerts)
+
+
+def test_burn_alert_forces_scale_up_past_deadband():
+    """THE acceptance wiring: an SLO burn alert scales the fleet up even
+    when instantaneous load says shrink and the deadband says hold."""
+    scaler = ReplicaAutoscaler(min_replicas=1, max_replicas=8, deadband=2)
+    m = SLOMonitor(_spec(min_requests=4))
+    for t in range(6):
+        m.observe_completion(_outcome(float(t), deadline=-1.0), now=float(t))
+    [alert] = m.evaluate(now=6.0)
+    assert alert.kind == ALERT_SLO_BURN
+
+    idle = _load(n_replicas=2, util=0.1)
+    assert scaler.decide(idle).n_replicas == 1          # load math: shrink
+    burned = _load(n_replicas=2, util=0.1,
+                   alerts=m.recent_alerts(now=6.0))
+    assert scaler.decide(burned).n_replicas == 3        # alert: grow
+    # alert kinds pass as plain strings too (launcher replay path)
+    assert scaler.decide(
+        _load(n_replicas=2, alerts=("revocation_storm",))).n_replicas == 3
+    # unknown kinds don't scale
+    assert scaler.decide(
+        _load(n_replicas=2, util=0.1, alerts=("weird",))).n_replicas == 1
+    # cap respected
+    assert scaler.decide(
+        _load(n_replicas=8, alerts=(alert,))).n_replicas == 8
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on a real (tiny) cluster
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b", reduced=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = L.unbox(model.init(jax.random.key(0)))
+    return cfg, model, params
+
+
+def _mk_cluster(model, params, clock, monitor=None, rec=None, n=1,
+                max_batch=2):
+    template = ServeEngine(model, params, max_batch=max_batch, max_len=32,
+                           cache_impl="paged", page_size=8)
+
+    def make_engine():
+        return ServeEngine(model, params, max_batch=max_batch, max_len=32,
+                           cache_impl="paged", page_size=8,
+                           clock=lambda: clock["t"],
+                           shared_fns=template.shared_fns)
+
+    return ServeCluster(make_engine, n_replicas=n,
+                        clock=lambda: clock["t"], recorder=rec,
+                        monitor=monitor)
+
+
+def _req(cfg, rid, rng, deadline, max_new=6):
+    return Request(rid=rid,
+                   prompt=rng.integers(1, cfg.vocab_size, size=(4,)).tolist(),
+                   max_new_tokens=max_new, deadline_s=deadline)
+
+
+def test_cluster_burn_alert_triggers_scale_up(setup):
+    """Deterministic virtual-clock replay: impossible deadlines burn the
+    SLO budget, the monitor fires, and the autoscaler grows the fleet —
+    measured health driving reconfiguration, the paper's redesign loop."""
+    cfg, model, params = setup
+    clock = {"t": 0.0}
+    monitor = SLOMonitor(_spec(min_requests=4, long_window_s=60.0,
+                               short_window_s=10.0))
+    cluster = _mk_cluster(model, params, clock, monitor=monitor)
+    scaler = ReplicaAutoscaler(min_replicas=1, max_replicas=4,
+                               target_util=0.75)
+    rng = np.random.default_rng(3)
+    for rid in range(6):
+        cluster.submit(_req(cfg, rid, rng, deadline=clock["t"] - 1.0))
+    scaled = False
+    steps = 0
+    while cluster.has_work() and steps < 500:
+        cluster.step()
+        clock["t"] += 0.5
+        steps += 1
+        alerts = monitor.evaluate(now=clock["t"])
+        if alerts and not scaled:
+            live = sum(1 for e in cluster.replicas if not e.draining)
+            dec = scaler.act(ServeLoad(
+                t_s=clock["t"], utilization=cluster.load,
+                queue_depth=cluster.queue_depth, n_replicas=live,
+                slots_per_replica=2,
+                alerts=monitor.recent_alerts(now=clock["t"])))
+            assert dec.n_replicas > live
+            cluster.scale_to(dec.n_replicas)
+            scaled = True
+    assert scaled, "burn alert never fired on an all-missed workload"
+    assert any(a.kind == ALERT_SLO_BURN for a in monitor.alerts)
+    assert cluster.n_replicas > 1
+    assert monitor.n_misses == monitor.n_outcomes > 0
+
+
+def test_monitor_and_sampler_feed_the_report(setup, tmp_path):
+    """attach_serve_cluster samples the standard signal set on the
+    virtual clock; the rendered report validates and carries the run's
+    series, alerts, and replica rows."""
+    cfg, model, params = setup
+    clock = {"t": 0.0}
+    monitor = SLOMonitor(_spec(min_requests=2))
+    cluster = _mk_cluster(model, params, clock, monitor=monitor, n=2)
+    sampler = TimeSeriesSampler(interval_s=0.5)
+    attach_serve_cluster(sampler, cluster)
+    rng = np.random.default_rng(4)
+    for rid in range(4):
+        cluster.submit(_req(cfg, rid, rng,
+                            deadline=(clock["t"] - 1.0) if rid % 2
+                            else math.inf))
+    steps = 0
+    while cluster.has_work() and steps < 500:
+        cluster.step()
+        clock["t"] += 0.25
+        steps += 1
+        sampler.maybe_sample(clock["t"])
+        monitor.evaluate(now=clock["t"])
+    sampler.sample(clock["t"])
+    series = sampler.series()
+    for name in ("queue_depth", "queue_age_s", "replicas_live",
+                 "utilization", "throughput_tok_s", "cost_rate_rs"):
+        assert name in series, f"missing standard series {name}"
+    assert "active_slots{replica=0}" in series
+    assert "page_pool_util{replica=1}" in series
+    assert max(series["replicas_live"].values) == 2.0
+    assert max(series["throughput_tok_s"].values) > 0
+    doc = render_report(series=series, alerts=monitor.alerts,
+                        replicas=cluster.replica_summaries(),
+                        summary={"requests": 4})
+    counts = validate_report(doc, min_series=5,
+                             min_alerts=len(monitor.alerts))
+    assert counts["svg"] >= 5
+    txt = render_text(series=series, alerts=monitor.alerts)
+    assert "queue_depth" in txt
+    # round-trip through the CLI-facing JSONL loader
+    path = str(tmp_path / "s.jsonl")
+    sampler.write_jsonl(path)
+    doc2 = render_report(series=load_series_jsonl(path))
+    validate_report(doc2, min_series=5)
+
+
+def test_monitor_overhead_under_2pct(setup):
+    """Per-observation monitor cost, scaled to the episode's request
+    volume with 2x margin, stays under 2% of the serving episode's wall
+    time vs a NullRecorder/no-monitor engine."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+
+    def run_episode():
+        eng = ServeEngine(model, params, max_batch=2, max_len=32)
+        for rid in range(6):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(1, cfg.vocab_size, size=(4,)).tolist(),
+                max_new_tokens=6))
+        t0 = time.perf_counter()
+        eng.run_to_completion()
+        return time.perf_counter() - t0, eng
+
+    walls = [run_episode()[0] for _ in range(3)]
+    wall = min(walls)
+    n_requests = 6
+
+    m = SLOMonitor(_spec())
+    n_sites = n_requests * 2                    # 2x margin on volume
+    costs = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for i in range(n_sites):
+            m.observe_completion(_outcome(float(i), deadline=math.inf),
+                                 now=float(i))
+            m.evaluate(now=float(i))
+        costs.append(time.perf_counter() - t0)
+    cost = min(costs)
+    assert cost < 0.02 * wall, (
+        f"monitor overhead {cost*1e3:.2f}ms vs 2% budget of "
+        f"{wall*1e3:.1f}ms episode")
+
+
+def test_voluntary_scale_down_is_not_a_revocation(setup):
+    """Autoscaler shrink drains must stay OUT of the monitor's storm
+    window — otherwise the monitor alerts on the autoscaler's own
+    decisions and the fleet thrashes (scale down -> 'storm' -> scale
+    up -> repeat). Provider warns still count."""
+    cfg, model, params = setup
+    clock = {"t": 0.0}
+    monitor = SLOMonitor(_spec(storm_revocations=3, storm_window_s=60.0))
+    cluster = _mk_cluster(model, params, clock, monitor=monitor, n=4)
+    cluster.scale_to(1)                     # three voluntary drains
+    clock["t"] = 1.0
+    assert monitor.evaluate(now=1.0) == []
+    assert len(monitor._revocations) == 0
+    cluster.warn(0, grace_tokens=0)         # a real provider warning
+    assert len(monitor._revocations) == 1
+
+
+def test_monitor_never_changes_engine_results(setup):
+    """Attaching monitor + recorder must not perturb generation: same
+    tokens with and without observability (the NullRecorder contract
+    extended to the health monitor)."""
+    cfg, model, params = setup
+    def run(monitor, rec):
+        rng = np.random.default_rng(6)
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          recorder=rec, monitor=monitor)
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    1, cfg.vocab_size, size=(4,)).tolist(),
+                    max_new_tokens=6) for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion()
+        return [r.generated for r in reqs]
+
+    plain = run(None, None)
+    observed = run(SLOMonitor(_spec()), obs.Recorder(deterministic=True))
+    assert plain == observed

@@ -1,0 +1,187 @@
+"""Correlated request tracing across replicas.
+
+The tentpole acceptance: a request displaced by a mid-run revocation
+carries ONE trace_id through enqueue → prefill → migrate → resume on a
+different replica, every span links to its predecessor (no orphans), and
+the merged cluster timeline exports to a valid Chrome trace whose flow
+arrows connect the request's hops across replica tracks.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.config import get_config
+from repro.models import layers as L
+from repro.models.builder import build_model
+from repro.serving import Request, ServeCluster, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b", reduced=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = L.unbox(model.init(jax.random.key(0)))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, seed=0, max_new=10, plen=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=(plen,)).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _paged_cluster(model, params, rec, clock, n_replicas=2):
+    template = ServeEngine(model, params, max_batch=2, max_len=32,
+                           cache_impl="paged", page_size=8)
+
+    def make_engine():
+        return ServeEngine(model, params, max_batch=2, max_len=32,
+                           cache_impl="paged", page_size=8,
+                           clock=lambda: clock["t"],
+                           shared_fns=template.shared_fns)
+
+    return ServeCluster(make_engine, n_replicas=n_replicas,
+                        clock=lambda: clock["t"], recorder=rec)
+
+
+def _trace_events(rec, trace_id):
+    return [e for e in rec.events if e.trace_id == trace_id]
+
+
+def _assert_linear_chain(evs, trace_id):
+    """Every span links to its predecessor; the first is the root; no
+    span references an id outside the trace (no orphans)."""
+    assert evs, f"trace {trace_id} emitted no events"
+    span_ids = [e.span_id for e in evs]
+    assert len(set(span_ids)) == len(span_ids), "duplicate span_ids"
+    assert evs[0].parent_id is None, "root span must have no parent"
+    for prev, cur in zip(evs, evs[1:]):
+        assert cur.parent_id == prev.span_id, (
+            f"broken parent link in {trace_id}: {cur.name} has parent "
+            f"{cur.parent_id!r}, expected {prev.span_id!r}")
+    known = set(span_ids)
+    for e in evs:
+        if e.parent_id is not None:
+            assert e.parent_id in known, f"orphan parent {e.parent_id!r}"
+
+
+def _replica_of(track):
+    return track.split("/", 1)[0] if "/" in track else None
+
+
+def test_cross_replica_trace_continuity(setup):
+    """Mid-run begin_drain on a paged 2-replica cluster: every migrated
+    request keeps one trace_id with a valid linear parent chain, both
+    migration modes (page-ship and replay-fallback) stay inside the
+    trace, and migrated requests' events span BOTH replica tracks."""
+    cfg, model, params = setup
+    rec = obs.Recorder(deterministic=True)
+    clock = {"t": 0.0}
+    cluster = _paged_cluster(model, params, rec, clock)
+    # 3 requests on 2 replicas x 2 slots: least-loaded routing puts two
+    # on r0, one on r1; warning r0 mid-decode yields one ship-import
+    # (r1's free slot) and one replay fallback (no second slot free)
+    reqs = _reqs(cfg, 3, seed=21, max_new=10)
+    for r in reqs:
+        cluster.submit(r)
+    while not all(r.generated for r in reqs):
+        cluster.step()
+        clock["t"] += 0.1
+    victim = next(i for i, e in enumerate(cluster.replicas)
+                  if sum(s is not None and not s.done for s in e.slots) >= 2)
+    cluster.warn(victim, grace_tokens=0)
+    cluster.run_to_completion()
+    assert all(r.done for r in reqs)
+    assert cluster.requests_imported >= 1, "expected a page-ship landing"
+    assert cluster.tokens_replayed > 0, "expected a replay fallback"
+
+    migrated = [r for r in reqs if r.timing.n_migrations > 0]
+    assert len(migrated) >= 2
+    for req in reqs:
+        assert req.trace_id == f"t{req.rid}"
+        evs = _trace_events(rec, req.trace_id)
+        _assert_linear_chain(evs, req.trace_id)
+        names = [e.name for e in evs]
+        assert names[0] == obs.EV_ENQUEUE
+        assert obs.EV_COMPLETE in names
+    for req in migrated:
+        evs = _trace_events(rec, req.trace_id)
+        replicas_seen = {_replica_of(e.track) for e in evs} - {None}
+        assert len(replicas_seen) >= 2, (
+            f"migrated request {req.rid} never left one replica track: "
+            f"{sorted(replicas_seen)}")
+        assert obs.EV_MIGRATE in [e.name for e in evs]
+
+
+def test_merged_timeline_links_migrations_with_flow_arrows(setup):
+    """The exported cluster Chrome trace validates and contains s/f flow
+    pairs binding each migrated trace's replica hop."""
+    cfg, model, params = setup
+    rec = obs.Recorder(deterministic=True)
+    clock = {"t": 0.0}
+    cluster = _paged_cluster(model, params, rec, clock)
+    reqs = _reqs(cfg, 3, seed=22, max_new=10)
+    for r in reqs:
+        cluster.submit(r)
+    while not all(r.generated for r in reqs):
+        cluster.step()
+        clock["t"] += 0.1
+    victim = next(i for i, e in enumerate(cluster.replicas)
+                  if sum(s is not None and not s.done for s in e.slots) >= 2)
+    cluster.warn(victim, grace_tokens=0)
+    cluster.run_to_completion()
+
+    trace = obs.to_chrome_trace(rec.events, clock="sim")
+    obs.validate_chrome_trace(trace)
+    assert trace["otherData"]["flows"] > 0
+    flow_traces = {e["args"]["trace_id"] for e in trace["traceEvents"]
+                   if e["ph"] in ("s", "f")}
+    for req in reqs:
+        if req.timing.n_migrations > 0:
+            assert req.trace_id in flow_traces, (
+                f"migrated request {req.rid} has no flow arrow")
+    # flow events land on real replica tracks, not a synthetic process
+    pid_names = {e["pid"]: e["args"]["name"] for e in trace["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+    for e in trace["traceEvents"]:
+        if e["ph"] in ("s", "f"):
+            assert e["pid"] in pid_names
+
+
+def test_hard_revoke_restart_stays_in_trace(setup):
+    """A from-scratch regeneration after revoke_slot continues the SAME
+    trace: the restart migrate event and the post-restart lifecycle all
+    chain onto the pre-revocation spans."""
+    cfg, model, params = setup
+    rec = obs.Recorder(deterministic=True)
+    eng = ServeEngine(model, params, max_batch=1, max_len=32, recorder=rec)
+    req = _reqs(cfg, 1, seed=23)[0]
+    eng.submit(req)
+    while len(req.generated) < 3:
+        eng.step()
+    eng.revoke_slot(0)
+    eng.run_to_completion()
+    assert req.done and req.timing.n_restarts == 1
+    evs = _trace_events(rec, req.trace_id)
+    _assert_linear_chain(evs, req.trace_id)
+    names = [e.name for e in evs]
+    # one lifecycle: enqueue .. migrate(restart) .. complete, in order
+    assert names.index(obs.EV_MIGRATE) < names.index(obs.EV_COMPLETE)
+
+
+def test_solo_engine_keeps_legacy_track_names(setup):
+    """Without a cluster, replica_id stays None and event tracks keep
+    their unprefixed names (slot0/req0) — existing tooling unaffected."""
+    cfg, model, params = setup
+    rec = obs.Recorder(deterministic=True)
+    eng = ServeEngine(model, params, max_batch=1, max_len=32, recorder=rec)
+    req = _reqs(cfg, 1, seed=24)[0]
+    eng.submit(req)
+    eng.run_to_completion()
+    tracks = {e.track for e in rec.events}
+    assert any(t.startswith("req") for t in tracks)
+    assert not any("/" in t for t in tracks)
